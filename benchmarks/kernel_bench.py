@@ -1,0 +1,57 @@
+"""Pallas kernel microbenchmarks vs the jnp oracles.
+
+On this CPU container the Pallas kernels run in interpret mode, so absolute
+times measure the *oracle-equivalent semantics*, not TPU performance; the
+derived column reports elements/s and the oracle ratio. On a real TPU set
+REPRO_PALLAS_INTERPRET=0.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(csv: bool = True) -> List[str]:
+    rng = np.random.default_rng(0)
+    lines = []
+
+    n, buckets = 1 << 16, 256
+    ids = jnp.asarray(rng.integers(0, buckets, size=n).astype(np.int32))
+    t_k = _time(lambda x: ops.bucket_histogram(x, buckets), ids)
+    t_r = _time(lambda x: ref.bucket_histogram_ref(x, buckets), ids)
+    lines.append(f"kernel_bucket_hist_{n},{t_k * 1e6:.1f},"
+                 f"{n / t_k / 1e6:.1f}Melem/s oracle={t_r * 1e6:.1f}us")
+
+    rows, cols = 4, 4096
+    keys = jnp.asarray(rng.integers(0, 1 << 30,
+                                    size=(rows, cols)).astype(np.int32))
+    vals = jnp.asarray(np.arange(rows * cols,
+                                 dtype=np.int32).reshape(rows, cols))
+    t_k = _time(ops.sort_kv_segments, keys, vals)
+    t_r = _time(ref.sort_kv_segments_ref, keys, vals)
+    lines.append(f"kernel_bitonic_sort_{rows}x{cols},{t_k * 1e6:.1f},"
+                 f"{rows * cols / t_k / 1e6:.2f}Melem/s "
+                 f"oracle={t_r * 1e6:.1f}us")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,64 @@
+"""Render the EXPERIMENTS.md roofline tables from the dry-run artifacts
+(baseline + optimized) and splice them into the markers."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.roofline import load_rows
+
+BASE = os.path.join(os.path.dirname(__file__), "results")
+
+
+def key(r):
+    return (r["arch"], r["shape"], r["mesh"])
+
+
+def table(opt_rows, base_rows) -> str:
+    base = {key(r): r for r in base_rows}
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful | step_s (base→opt) | bound-MFU |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(opt_rows, key=key):
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |  |  |"
+                         f"  | SKIP: full attn @500k |  |  |  |")
+            continue
+        rf = r["roofline"]
+        b = base.get(key(r), {})
+        bstep = b.get("roofline", {}).get("step_time_s")
+        bs = f"{bstep:.3f}→" if bstep is not None else ""
+        uf = r.get("useful_flops_ratio") or 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant'].replace('_s','')} "
+            f"| {uf:.2f} | {bs}{rf['step_time_s']:.3f} "
+            f"| {rf['mfu_bound'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    opt = load_rows(os.path.join(BASE, "dryrun"))
+    base = load_rows(os.path.join(BASE, "dryrun_baseline"))
+    tbl = table(opt, base)
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        pre, _, post = text.partition(marker)
+        # drop any previously rendered table up to the next heading
+        rest = post.lstrip().split("\n\nObservations:", 1)
+        tail = "\n\nObservations:" + rest[1] if len(rest) > 1 else post
+        text = pre + marker + "\n\n" + tbl + tail
+        open(path, "w").write(text)
+        print(f"wrote {tbl.count(chr(10)) - 1} rows into EXPERIMENTS.md")
+    else:
+        print(tbl)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Roofline report: aggregates the dry-run JSONs into the EXPERIMENTS.md
+table (one row per arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_rows(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def format_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful_flops | step_s | bound-MFU |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | SKIP (full attn @500k) | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR: {r['error'][:60]} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant'].replace('_s', '')} "
+            f"| {uf:.2f} | {rf['step_time_s']:.4f} "
+            f"| {rf['mfu_bound'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def run(csv: bool = True) -> List[str]:
+    rows = load_rows()
+    out = []
+    for r in rows:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+                   f"{rf['step_time_s'] * 1e6:.0f},"
+                   f"dominant={rf['dominant']} "
+                   f"mfu_bound={rf['mfu_bound'] * 100:.1f}%")
+    if not out:
+        out.append("roofline_pending,0,run python -m repro.launch.dryrun --all")
+    return out
+
+
+if __name__ == "__main__":
+    print(format_markdown(load_rows()))

@@ -1,0 +1,60 @@
+"""Storage design-decision benchmark (paper Table 2: files vs blocks).
+
+Quantifies the paper's central storage argument on a live deployment:
+- file mode (Sector): one slave contact per file read; replication created
+  lazily by the daemon (writes are cheap);
+- block mode (GFS/HDFS emulation): R-replicated at write time (write
+  amplification) and a read touches ceil(size/block) slaves.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import List
+
+from repro.sector import (Master, NodeAddress, ReplicationDaemon,
+                          SectorClient, SecurityServer, SlaveNode, Topology)
+
+
+def _deploy(block_mode: bool, replication: int = 3):
+    root = tempfile.mkdtemp(prefix="bench_modes_")
+    sec = SecurityServer()
+    sec.add_user("u", "pw")
+    sec.allow_slaves("10.0.0.0/8")
+    m = Master(sec, replication_factor=replication, block_mode=block_mode,
+               block_size=8 << 10)
+    topo = Topology(pods=2, racks=2, nodes_per_rack=4)
+    for i, addr in enumerate(topo.all_addresses()):
+        m.register_slave(SlaveNode(i, addr, os.path.join(root, f"s{i}"),
+                                   ip=f"10.0.0.{i + 1}"))
+    return m, SectorClient(m, "u", "pw", client_addr=NodeAddress(0, 0, 0))
+
+
+def run(csv: bool = True) -> List[str]:
+    lines = []
+    payload = b"r" * (64 << 10)              # one 64 KiB "slice" (8 blocks)
+    for mode in ("file", "block"):
+        m, c = _deploy(block_mode=(mode == "block"))
+        m.stats["transfers"] = 0
+        for i in range(8):
+            c.upload(f"/ds/f{i:02d}", payload)
+        write_transfers = m.stats["transfers"]
+        if mode == "file":
+            ReplicationDaemon(m).run_until_stable()   # lazy replication
+        m.stats["transfers"] = 0
+        for i in range(8):
+            assert c.download(f"/ds/f{i:02d}") == payload
+        read_transfers = m.stats["transfers"]
+        lines.append(
+            f"storage_{mode}_mode,{read_transfers},"
+            f"write_transfers={write_transfers} "
+            f"read_transfers_per_file={read_transfers / 8:.0f} "
+            f"(paper Table 2: files -> 1 slave/read, lazy replicas; "
+            f"blocks -> replicate-at-write, many slaves/read)")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,72 @@
+"""Quickstart: the paper's §3.1 pseudo-code, runnable.
+
+    SphereStream sdss;  sdss.init(<slices>);
+    SphereProcess myproc;  myproc.run(sdss, "findBrownDwarf");
+    myproc.read(result);
+
+Brings up an in-process Sector deployment, uploads a sliced 'SDSS' dataset,
+and runs a UDF over every segment through the Sphere engine — with locality
+scheduling and fault tolerance underneath.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.sector import (Master, NodeAddress, ReplicationDaemon,
+                          SectorClient, SecurityServer, SlaveNode, Topology)
+from repro.sphere.engine import SphereProcess
+from repro.sphere.spe import SPE
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="sector_quickstart_")
+
+    # 1. bring up the storage cloud: security server, master, slaves
+    sec = SecurityServer()
+    sec.add_user("astro", "pw")
+    sec.allow_slaves("10.0.0.0/8")
+    master = Master(sec, replication_factor=2)
+    topo = Topology(pods=1, racks=2, nodes_per_rack=3)
+    for i, addr in enumerate(topo.all_addresses()):
+        master.register_slave(SlaveNode(i, addr,
+                                        os.path.join(root, f"slave{i}"),
+                                        ip=f"10.0.0.{i + 1}"))
+    client = SectorClient(master, "astro", "pw",
+                          client_addr=NodeAddress(0, 0, 0))
+
+    # 2. upload the dataset as Sector slices (paper: SDSS1.dat ... SDSS64.dat)
+    rng = np.random.default_rng(0)
+    record_bytes = 1024            # one "image" per record
+    slices = [rng.integers(0, 256, size=(200, record_bytes),
+                           dtype=np.uint8) for _ in range(8)]
+    client.upload_dataset("/sdss/SDSS", [s.tobytes() for s in slices])
+    ReplicationDaemon(master).run_until_stable()
+    print(f"uploaded {len(slices)} slices; "
+          f"{len(master.index)} files in the master index")
+
+    # 3. the UDF
+    def find_brown_dwarf(records: np.ndarray) -> np.ndarray:
+        brightness = records.astype(np.int32).sum(axis=1)
+        return np.nonzero(brightness > brightness.mean())[0].astype(np.int32)
+
+    # 4. run it over every segment (one SPE per slave)
+    spes = [SPE(i, master.slaves[i].address, master, client.session_id)
+            for i in range(6)]
+    proc = SphereProcess(master, client.session_id, spes)
+    result = proc.run([f"/sdss/SDSS.{i:05d}" for i in range(8)],
+                      find_brown_dwarf, record_bytes)
+    found = sum(len(v) for v in result.outputs.values())
+    print(f"segments processed: {len(result.outputs)}, "
+          f"brown dwarfs found: {found}, retries: {result.retries}, "
+          f"errors: {len(result.errors)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Sphere compute primitives (paper §3), as composable JAX modules.
+
+The paper's abstractions map onto SPMD JAX:
+
+- a *stream* of *segments*  -> :class:`repro.core.stream.SphereStream`
+  (a sharded array; one segment per device along a mesh axis);
+- an *SPE applying a UDF*   -> :func:`repro.core.udf.sphere_map`
+  (``shard_map``: the UDF body runs per-device on its local segment);
+- *bucket shuffle*          -> :func:`repro.core.shuffle.sphere_shuffle`
+  (capacity-bounded ``all_to_all``; also drives MoE expert dispatch);
+- *two-stage sort* (Fig 3)  -> :func:`repro.core.sort.terasort`;
+- *MapReduce as Map UDF + Reduce UDF* (§3.6)
+                            -> :func:`repro.core.mapreduce.map_reduce`.
+"""
+
+from repro.core.stream import SphereStream
+from repro.core.udf import sphere_map
+from repro.core.shuffle import ShuffleResult, sphere_shuffle, sphere_combine
+from repro.core.sort import terasort, hadoop_style_sort
+from repro.core.mapreduce import map_reduce
+
+__all__ = [
+    "SphereStream", "sphere_map",
+    "ShuffleResult", "sphere_shuffle", "sphere_combine",
+    "terasort", "hadoop_style_sort", "map_reduce",
+]

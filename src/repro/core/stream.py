@@ -1,0 +1,107 @@
+"""Sphere streams (paper §3.2).
+
+"A stream ... represents either a dataset or a part of a dataset. Sphere
+takes streams as inputs and produces streams as outputs. A Sphere stream
+consists of multiple data segments and the segments are processed by Sphere
+Processing Engines (SPEs)."
+
+Here a stream is a record array sharded along its leading axis over a mesh
+axis: the per-device block *is* the segment an SPE (device) processes. The
+segment-size bounds S_min/S_max of the paper's scheduler (§3.5.1) become the
+per-device block size induced by the sharding; ``segments()`` exposes the
+host-level segment table that the :mod:`repro.sphere.scheduler` schedules
+across hosts when streams are read from Sector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: Paper defaults for segment sizing (§3.5.1), in records here rather than MB.
+S_MIN_DEFAULT = 8 << 20
+S_MAX_DEFAULT = 128 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentInfo:
+    """Host-level segment descriptor: which records, from which Sector file."""
+    index: int
+    file_path: str
+    offset: int
+    num_records: int
+
+
+@dataclasses.dataclass
+class SphereStream:
+    """A sharded record array plus its segment table.
+
+    ``data``: (num_records, ...) array (sharded or to-be-sharded).
+    ``valid``: optional (num_records,) bool mask — Sphere outputs may be
+    padded (capacity-bounded shuffles), and downstream UDFs must know which
+    rows are real records.
+    """
+
+    data: jax.Array
+    valid: Optional[jax.Array] = None
+    segment_table: Optional[List[SegmentInfo]] = None
+
+    @property
+    def num_records(self) -> int:
+        return self.data.shape[0]
+
+    def with_data(self, data: jax.Array, valid: Optional[jax.Array] = None
+                  ) -> "SphereStream":
+        return SphereStream(data=data, valid=valid,
+                            segment_table=self.segment_table)
+
+    # -- sharding -------------------------------------------------------------
+    def shard(self, mesh: Mesh, axis: str | Tuple[str, ...] = "data") -> "SphereStream":
+        spec = P(axis)
+        sharding = NamedSharding(mesh, spec)
+        data = jax.device_put(self.data, sharding)
+        valid = None
+        if self.valid is not None:
+            valid = jax.device_put(self.valid, NamedSharding(mesh, P(axis)))
+        return SphereStream(data=data, valid=valid, segment_table=self.segment_table)
+
+    # -- segment bookkeeping ---------------------------------------------------
+    @staticmethod
+    def plan_segments(total_records: int, record_bytes: int,
+                      files: Sequence[Tuple[str, int]],
+                      s_min: int = S_MIN_DEFAULT, s_max: int = S_MAX_DEFAULT,
+                      num_spes: int = 1) -> List[SegmentInfo]:
+        """Paper §3.5.1 segmentation: uniform split across SPEs, clamped to
+        [S_min, S_max] bytes, whole records only, never spanning files.
+
+        ``files``: (sector_path, num_records) per input file.
+        """
+        if total_records == 0:
+            return []
+        target = max(1, total_records // max(num_spes, 1))
+        min_rec = max(1, math.ceil(s_min / record_bytes))
+        max_rec = max(1, s_max // record_bytes)
+        per_seg = min(max(target, min_rec), max_rec)
+        segs: List[SegmentInfo] = []
+        idx = 0
+        for path, nrec in files:
+            off = 0
+            while off < nrec:
+                n = min(per_seg, nrec - off)
+                segs.append(SegmentInfo(idx, path, off, n))
+                idx += 1
+                off += n
+        return segs
+
+
+def make_stream(data: jnp.ndarray, mesh: Optional[Mesh] = None,
+                axis: str = "data") -> SphereStream:
+    s = SphereStream(data=jnp.asarray(data))
+    if mesh is not None:
+        s = s.shard(mesh, axis)
+    return s

@@ -1,0 +1,7 @@
+"""Sector-backed data pipeline: dataset slices live in the storage cloud;
+segments are scheduled onto hosts with the Sphere locality rules."""
+
+from repro.data.pipeline import SectorDataPipeline, upload_token_dataset
+from repro.data.synthetic import synthetic_tokens
+
+__all__ = ["SectorDataPipeline", "upload_token_dataset", "synthetic_tokens"]

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the Terasort hot spots (paper §4.2, Fig 3).
+
+The paper's compute-critical path is the two-stage distributed sort:
+stage 1 hashes every record into a range bucket; stage 2 sorts each bucket
+locally. On commodity CPUs those are a table-driven scatter and quicksort; on
+TPU there is no efficient per-element scatter, so we adapt:
+
+- ``bucket_hist``   — per-tile one-hot histogram, computed as an MXU matmul.
+- ``bitonic_sort``  — in-VMEM bitonic network over (key, payload) pairs using
+                      XOR-partner compare-exchange realized as reshapes/flips
+                      (no gather/scatter), the TPU-native sort.
+
+``ops`` exposes jit'd wrappers; ``ref`` holds the pure-jnp oracles used by the
+tests' allclose sweeps.
+"""
+
+from repro.kernels.ops import (
+    bucket_histogram,
+    sort_segments,
+    sort_kv_segments,
+)
+
+__all__ = ["bucket_histogram", "sort_segments", "sort_kv_segments"]

@@ -1,0 +1,112 @@
+"""Pallas kernel: in-VMEM bitonic sort of (key, payload) segments.
+
+Terasort stage 2 (paper Fig 3) sorts each bucket locally; the paper's SPEs
+call a CPU quicksort on the whole segment. Quicksort is branch/scatter bound
+and has no TPU analogue, so we adapt the insight ("sort whole segments where
+they live") to the TPU's vector units with a **bitonic sorting network**:
+
+- compare-exchange partners at distance ``j`` (a power of two) are obtained
+  by ``reshape(S//(2j), 2, j)`` + a flip along the middle axis — XOR-partner
+  addressing with *no gather/scatter*, pure relayout;
+- the ascending/descending direction of stage ``k`` depends only on the outer
+  index ``q``, so it is a broadcasted-iota predicate;
+- the whole network is O(S log^2 S) fully-vectorized compare-exchanges on a
+  segment resident in VMEM.
+
+One grid step sorts one segment; the payload array is permuted alongside the
+keys (used to carry record indices through the sort).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(keys, vals, k_exp: int, j_exp: int):
+    """One bitonic stage: partners at distance 2^j_exp within blocks of
+    2^k_exp. keys/vals are flat (S,)."""
+    s = keys.shape[0]
+    j = 1 << j_exp
+    rows = s // (2 * j)
+    ks = keys.reshape(rows, 2, j)
+    vs = vals.reshape(rows, 2, j)
+    lo_k, hi_k = ks[:, 0, :], ks[:, 1, :]
+    lo_v, hi_v = vs[:, 0, :], vs[:, 1, :]
+    # ascending iff bit k_exp of the element index is 0; that bit lives at
+    # bit (k_exp - j_exp - 1) of the row index q.
+    shift = k_exp - j_exp - 1
+    q = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    dir_up = ((q >> shift) & 1) == 0
+    swap = jnp.where(dir_up, lo_k > hi_k, lo_k < hi_k)
+    new_lo_k = jnp.where(swap, hi_k, lo_k)
+    new_hi_k = jnp.where(swap, lo_k, hi_k)
+    new_lo_v = jnp.where(swap, hi_v, lo_v)
+    new_hi_v = jnp.where(swap, lo_v, hi_v)
+    keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(s)
+    vals = jnp.stack([new_lo_v, new_hi_v], axis=1).reshape(s)
+    return keys, vals
+
+
+def _bitonic_kernel(keys_ref, vals_ref, out_k_ref, out_v_ref):
+    s = keys_ref.shape[-1]
+    m = int(math.log2(s))
+    keys = keys_ref[...].reshape(s)
+    vals = vals_ref[...].reshape(s)
+    for k_exp in range(1, m + 1):
+        for j_exp in range(k_exp - 1, -1, -1):
+            keys, vals = _compare_exchange(keys, vals, k_exp, j_exp)
+    out_k_ref[...] = keys.reshape(out_k_ref.shape)
+    out_v_ref[...] = vals.reshape(out_v_ref.shape)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(1, (x - 1).bit_length())
+
+
+def _max_sentinel(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_kv_segments_pallas(keys: jnp.ndarray, values: jnp.ndarray,
+                            interpret: bool = True):
+    """Sort each row of ``keys`` ascending, permuting ``values`` alongside.
+
+    keys/values: (num_segments, segment_len). Padding to the next power of two
+    uses a max sentinel so padded slots sort to the end and are sliced off.
+    Not stable — callers needing stability pack a unique tiebreak into keys.
+    """
+    n, s = keys.shape
+    s_pad = _next_pow2(s)
+    if s_pad != s:
+        pad_k = jnp.full((n, s_pad - s), _max_sentinel(keys.dtype), keys.dtype)
+        pad_v = jnp.zeros((n, s_pad - s), values.dtype)
+        keys = jnp.concatenate([keys, pad_k], axis=1)
+        values = jnp.concatenate([values, pad_v], axis=1)
+    out_k, out_v = pl.pallas_call(
+        _bitonic_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, s_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((1, s_pad), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, s_pad), lambda i: (i, 0)),
+                   pl.BlockSpec((1, s_pad), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, s_pad), keys.dtype),
+                   jax.ShapeDtypeStruct((n, s_pad), values.dtype)],
+        interpret=interpret,
+    )(keys, values)
+    return out_k[:, :s], out_v[:, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_segments_pallas(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Keys-only row sort (payload = dummy)."""
+    dummy = jnp.zeros_like(keys, dtype=jnp.int32)
+    out_k, _ = sort_kv_segments_pallas(keys, dummy, interpret=interpret)
+    return out_k

@@ -1,0 +1,50 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in Pallas ``interpret`` mode (the
+kernel body runs as traced JAX ops); on a real TPU set
+``REPRO_PALLAS_INTERPRET=0`` to run the compiled kernels. ``use_pallas=False``
+falls back to the jnp oracles in :mod:`repro.kernels.ref` — the terasort
+benchmark uses that switch to measure kernel-vs-oracle parity.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bucket_hist import bucket_histogram_pallas
+from repro.kernels.bitonic_sort import sort_kv_segments_pallas, sort_segments_pallas
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def bucket_histogram(bucket_ids: jnp.ndarray, num_buckets: int,
+                     use_pallas: bool = True) -> jnp.ndarray:
+    """int32 (num_buckets,) histogram; ids outside range are ignored."""
+    if not use_pallas:
+        return ref.bucket_histogram_ref(bucket_ids, num_buckets)
+    return bucket_histogram_pallas(bucket_ids, num_buckets,
+                                   interpret=_interpret_default())
+
+
+def sort_segments(keys: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    """Sort each row ascending."""
+    if not use_pallas:
+        return ref.sort_segments_ref(keys)
+    return sort_segments_pallas(keys, interpret=_interpret_default())
+
+
+def sort_kv_segments(keys: jnp.ndarray, values: jnp.ndarray,
+                     use_pallas: bool = True):
+    """Sort each row of (keys, values) by key."""
+    if not use_pallas:
+        return ref.sort_kv_segments_ref(keys, values)
+    return sort_kv_segments_pallas(keys, values, interpret=_interpret_default())

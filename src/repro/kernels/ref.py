@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (used by the allclose test sweeps).
+
+These are the semantics the kernels must match exactly; they are also the
+fallback implementation path when Pallas is unavailable.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_histogram_ref(bucket_ids: jnp.ndarray, num_buckets: int) -> jnp.ndarray:
+    """Count of records per bucket. ids outside [0, num_buckets) are ignored.
+
+    Args:
+      bucket_ids: int32 (n,)
+      num_buckets: static python int
+    Returns:
+      int32 (num_buckets,)
+    """
+    ids = bucket_ids.astype(jnp.int32)
+    onehot = (ids[:, None] == jnp.arange(num_buckets, dtype=jnp.int32)[None, :])
+    return jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def sort_segments_ref(keys: jnp.ndarray) -> jnp.ndarray:
+    """Ascending sort of each segment (row) independently.
+
+    Args:
+      keys: (num_segments, segment_len) int32/uint32/float32
+    Returns:
+      sorted keys, same shape/dtype
+    """
+    return jnp.sort(keys, axis=-1)
+
+
+def sort_kv_segments_ref(keys: jnp.ndarray, values: jnp.ndarray):
+    """Sort each segment of (key, value) rows by key (stable).
+
+    Args:
+      keys:   (num_segments, segment_len)
+      values: (num_segments, segment_len) payload (e.g. record index)
+    Returns:
+      (sorted_keys, permuted_values)
+    """
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    skeys = jnp.take_along_axis(keys, order, axis=-1)
+    svals = jnp.take_along_axis(values, order, axis=-1)
+    return skeys, svals

@@ -1,0 +1,465 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms.
+
+This file MUST set XLA_FLAGS before any jax import (device count locks on
+first init) — hence the module-level lines above the docstring.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama_1_1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+
+Outputs one JSON per cell with: memory analysis (XLA + analytic bytes/device),
+cost analysis (FLOPs, bytes), per-collective byte counts parsed from the
+post-SPMD HLO, and the three roofline terms (compute/memory/collective
+seconds) with the dominant bottleneck identified.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, ARCH_IDS
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.models.registry import Model, build
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.trainer import build_train_step, make_state_shardings
+
+# TPU v5e-flavoured hardware model (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _first_shape_bytes(segment: str) -> int:
+    m = _SHAPE_RE.search(segment)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in the (post-SPMD) HLO.
+
+    For `-start` async forms the result is a tuple (operands..., outputs...);
+    we count the *last* shaped component (the output buffer). all-reduce is
+    counted 2x (ring = reduce-scatter + all-gather bytes on the wire).
+    """
+    out = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVE_OPS) +
+                      r")(-start)?\(", stripped)
+        if not m:
+            continue
+        result_type, op, _async = m.group(1), m.group(2), m.group(3)
+        shapes = _SHAPE_RE.findall(result_type)
+        if not shapes:
+            continue
+        dt, dims = shapes[-1]
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes = n * _DTYPE_BYTES[dt]
+        if op == "all-reduce":
+            nbytes *= 2
+        out[op] += nbytes
+    return out
+
+
+def abstract_params(model: Model, key) -> Tuple[Any, Any]:
+    """ShapeDtypeStructs + PartitionSpecs for the params, with NO allocation.
+    Specs are static python built alongside init; captured via side channel
+    during the abstract trace."""
+    box = {}
+
+    def init_only(k):
+        p, s = model.init(k)
+        box["specs"] = s
+        return p
+
+    sds = jax.eval_shape(init_only, key)
+    return sds, box["specs"]
+
+
+def analytic_param_bytes(sds, specs, mesh: Mesh) -> int:
+    """Per-device parameter bytes implied by the shardings."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(sds),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        shard = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shard *= mesh.shape.get(a, 1)
+        total += leaf.size * leaf.dtype.itemsize // max(shard, 1)
+    return total
+
+
+def moe_active_fraction(model: Model, sds) -> float:
+    """N_active / N for MODEL_FLOPS (6*N_active*D)."""
+    cfg = model.cfg
+    total = sum(l.size for l in jax.tree.leaves(sds))
+    if not cfg.is_moe:
+        return 1.0
+    flat = jax.tree.flatten_with_path(sds)[0]
+    expert_sz = sum(l.size for path, l in flat
+                    if any(getattr(p, "key", None) in
+                           ("w_gate", "w_up", "w_down") for p in path)
+                    and any(getattr(p, "key", None) == "moe" for p in path))
+    from repro.models.moe import padded_experts
+    e_pad = padded_experts(cfg)
+    active = total - expert_sz + expert_sz * cfg.top_k / e_pad
+    return active / total
+
+
+def model_flops(model: Model, sds, shape_name: str) -> float:
+    sp = SHAPES[shape_name]
+    n = sum(l.size for l in jax.tree.leaves(sds))
+    n_active = n * moe_active_fraction(model, sds)
+    if sp.kind == "train":
+        tokens = sp.global_batch * sp.seq_len
+        return 6.0 * n_active * tokens
+    if sp.kind == "prefill":
+        tokens = sp.global_batch * sp.seq_len
+        return 2.0 * n_active * tokens
+    tokens = sp.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def analytic_hbm_bytes(cfg, shape_name: str, mesh: Mesh, n_params: int,
+                       zero1: bool = True) -> float:
+    """Per-device-per-step HBM traffic model for the TPU target.
+
+    XLA:CPU's "bytes accessed" assumes no fusion (every op round-trips HBM),
+    which overstates TPU traffic by >10x; this analytic model is the memory
+    roofline term instead (the raw XLA number is still reported). Components
+    (see EXPERIMENTS.md §Roofline):
+
+    train:  params fp32 read fwd+bwd (8B/param) + grad write+read (8B)
+            + AdamW m/v read+write + p read+write (24B, /data-size with
+            ZeRO-1) + activations (remat: ~6 streams of L*T_loc*d bf16)
+            + fp32 logits write+read fwd/bwd (16B per token-vocab-shard).
+    prefill: params 4B + 2-stream activations + KV-cache write.
+    decode:  params 4B (weights-bound) + full KV/state cache read + write.
+    """
+    sp = SHAPES[shape_name]
+    tp = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    n_dev = n_params / tp
+    b_loc = max(sp.global_batch // dsize, 1)
+
+    if sp.kind == "train":
+        t_loc = b_loc * sp.seq_len
+        params_traffic = 16 * n_dev + 24 * n_dev / (dsize if zero1 else 1)
+        acts = 6.0 * cfg.num_layers * t_loc * cfg.d_model * 2
+        logits = 16.0 * t_loc * cfg.vocab / tp
+        return params_traffic + acts + logits
+    if sp.kind == "prefill":
+        t_loc = b_loc * sp.seq_len
+        acts = 2.0 * cfg.num_layers * t_loc * cfg.d_model * 2
+        cache_w = _cache_bytes_per_device(cfg, sp, mesh)
+        return 4 * n_dev + acts + cache_w
+    # decode: one token; weights + cache round-trip
+    cache = _cache_bytes_per_device(cfg, sp, mesh)
+    return 4 * n_dev + cache
+
+
+def _cache_bytes_per_device(cfg, sp, mesh: Mesh) -> float:
+    """Approximate per-device KV/state cache bytes for a full context."""
+    tp = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_loc = max(sp.global_batch // dsize, 1)
+    t = sp.seq_len
+    if cfg.family == "ssm":                    # xlstm matrix states
+        d_in = cfg.ssm_expand * cfg.d_model
+        h = max(cfg.ssm_heads or cfg.n_heads, 1)
+        per_layer = b_loc * (d_in // h) ** 2 * h * 4
+        return cfg.num_layers * per_layer / tp
+    if cfg.family == "hybrid":                 # zamba2: ssm + shared attn kv
+        d_in = cfg.ssm_expand * cfg.d_model
+        h = max(d_in // 64, 1)
+        ssm = cfg.num_layers * b_loc * h * 64 * cfg.ssm_state * 4
+        n_shared = len([i for i in range(cfg.num_layers)
+                        if cfg.attn_every and (i + 1) % cfg.attn_every == 0])
+        attn = n_shared * b_loc * t * cfg.n_kv_heads * cfg.hd * 2 * 2
+        return (ssm + attn) / tp
+    if cfg.attn_type == "mla":                 # latent cache, tp-replicated
+        per_layer = b_loc * t * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+        return cfg.num_layers * per_layer
+    t_eff = min(t, cfg.window) if cfg.attn_type == "swa" else t
+    kv_shard = tp if cfg.n_kv_heads % tp == 0 else 1
+    per_layer = b_loc * t_eff * cfg.n_kv_heads * cfg.hd * 2 * 2 / kv_shard
+    layers = cfg.num_layers + (cfg.enc_layers or 0)
+    return layers * per_layer
+
+
+def _lower_and_compile(cfg, shape_name: str, mesh: Mesh, dp,
+                       zero1: bool, accum_steps: int = 1,
+                       bf16_params: bool = False):
+    """Lower+compile one program for ``cfg``; returns (compiled, extras).
+
+    ``bf16_params``: store/compute params in bf16 with an fp32 master copy
+    in the (ZeRO-1 sharded) optimizer state — halves weight memory/traffic.
+    """
+    sp = SHAPES[shape_name]
+    model = build(cfg)
+    key = jax.random.PRNGKey(0)
+    p_sds, p_specs = abstract_params(model, key)
+    if bf16_params:
+        p_sds = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16), p_sds)
+    in_sds = model.input_specs(shape_name)
+    b_specs = model.batch_specs(shape_name, dp=dp)
+    b_shard = {k: NamedSharding(mesh, s) for k, s in b_specs.items()}
+
+    if sp.kind == "train":
+        opt_cfg = AdamWConfig()
+        p_shard, opt_shard = make_state_shardings(model, mesh, p_specs,
+                                                  zero1=zero1,
+                                                  master=bf16_params)
+        opt_sds = jax.eval_shape(
+            lambda p: init_opt_state(p, master=bf16_params), p_sds)
+        step = build_train_step(model, opt_cfg, mesh, dp, accum_steps)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, opt_shard, b_shard),
+                         out_shardings=(p_shard, opt_shard, None),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(p_sds, opt_sds, in_sds)
+        opt_specs = jax.tree.map(lambda s: s.spec, opt_shard["m"],
+                                 is_leaf=lambda x: hasattr(x, "spec"))
+        state_bytes = (analytic_param_bytes(p_sds, p_specs, mesh)
+                       + 2 * analytic_param_bytes(opt_sds["m"], opt_specs,
+                                                  mesh))
+    else:
+        p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                               is_leaf=lambda x: isinstance(x, P))
+        if sp.kind == "prefill":
+            fn = lambda p, b: model.prefill(p, b, None, mesh=mesh,
+                                            dp_axes=dp)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            with mesh:
+                lowered = jitted.lower(p_sds, in_sds)
+        else:  # decode
+            c_specs = model.cache_specs(shape_name, dp=dp)
+            c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+            c_sds = jax.eval_shape(
+                lambda: model.init_caches(sp.global_batch, sp.seq_len))
+            fn = lambda p, c, b: model.decode_step(p, c, b, mesh=mesh,
+                                                   dp_axes=dp)
+            jitted = jax.jit(fn,
+                             in_shardings=(p_shard, c_shard, b_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,))
+            with mesh:
+                lowered = jitted.lower(p_sds, c_sds, in_sds)
+        state_bytes = analytic_param_bytes(p_sds, p_specs, mesh)
+    compiled = lowered.compile()
+    return compiled, {"state_bytes": state_bytes, "p_sds": p_sds,
+                      "model": model}
+
+
+def _costs_of(compiled) -> Tuple[float, float, Dict[str, int]]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def _small_cfg(cfg, n_layers: int):
+    import dataclasses as dc
+    kw = {"num_layers": n_layers, "scan_layers": False}
+    if cfg.enc_layers:
+        kw["enc_layers"] = n_layers
+    if cfg.attn_every:
+        kw["attn_every"] = 0
+    if cfg.slstm_every:
+        kw["slstm_every"] = 0
+    return dc.replace(cfg, **kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               zero1: bool = True, accum_steps: int = 1,
+               cfg_override=None, bf16_params: bool = False) -> Dict[str, Any]:
+    cfg = cfg_override or get_config(arch)
+    if shape_name not in cfg.runnable_shapes():
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": "full attention cannot run long-context decode "
+                           "(DESIGN.md §4)"}
+    sp = SHAPES[shape_name]
+    model = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes_of(mesh)
+    key = jax.random.PRNGKey(0)
+
+    t0 = time.time()
+    compiled, extras = _lower_and_compile(cfg, shape_name, mesh, dp, zero1,
+                                          accum_steps, bf16_params)
+    t_compile = time.time() - t0
+    model = extras["model"]
+    p_sds = extras["p_sds"]
+    state_bytes = extras["state_bytes"]
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes")
+                 if hasattr(mem, k)} if mem is not None else {}
+    except Exception:
+        mem_d = {}
+
+    flops_dev, bytes_dev, coll = _costs_of(compiled)
+
+    # ---- scan-trip-count correction -------------------------------------
+    # XLA cost_analysis counts a lax.scan body ONCE regardless of trip
+    # count, so scanned stacks under-report flops/bytes/collectives. We
+    # recover the true affine cost c(L) = a + b*L by compiling unrolled
+    # L=1 and L=2 variants of the same config: b = c2-c1, a = 2*c1-c2.
+    uses_scan = cfg.scan_layers and (
+        cfg.family in ("dense", "moe", "audio", "vlm"))
+    corrected = None
+    if uses_scan:
+        c1, _ = _lower_and_compile(_small_cfg(cfg, 1), shape_name, mesh, dp,
+                                   zero1, accum_steps, bf16_params)
+        c2, _ = _lower_and_compile(_small_cfg(cfg, 2), shape_name, mesh, dp,
+                                   zero1, accum_steps, bf16_params)
+        f1, by1, co1 = _costs_of(c1)
+        f2, by2, co2 = _costs_of(c2)
+        L = cfg.num_layers
+        lin = lambda v1, v2: max((2 * v1 - v2) + (v2 - v1) * L, 0.0)
+        corrected = {
+            "flops": lin(f1, f2),
+            "bytes": lin(by1, by2),
+            "collectives": {k: lin(co1[k], co2[k]) for k in coll},
+        }
+        flops_dev = corrected["flops"]
+        bytes_dev = corrected["bytes"]
+        coll = {k: int(v) for k, v in corrected["collectives"].items()}
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    coll_dev = float(sum(coll.values()))
+    mf = model_flops(model, p_sds, shape_name)
+
+    compute_s = flops_dev / PEAK_FLOPS
+    n_params = sum(l.size for l in jax.tree.leaves(p_sds))
+    hbm_bytes = analytic_hbm_bytes(cfg, shape_name, mesh, n_params,
+                                   zero1=zero1)
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape), "chips": chips,
+        "compile_s": round(t_compile, 2),
+        "scan_corrected": bool(uses_scan),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "analytic_hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll,
+        "collective_total_per_device": coll_dev,
+        "state_bytes_per_device": int(state_bytes),
+        "xla_memory_analysis": mem_d,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flops_ratio": (mf / chips) / flops_dev if flops_dev else None,
+        "roofline": dict(terms, dominant=dominant,
+                         step_time_s=max(terms.values()),
+                         mfu_bound=(mf / chips / PEAK_FLOPS)
+                         / max(max(terms.values()), 1e-12)),
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="bf16 params + fp32 master in optimizer")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[skip-cached] {tag}", flush=True)
+            continue
+        print(f"[lower] {tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape, mp, zero1=not args.no_zero1,
+                             bf16_params=args.bf16_params)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "multi" if mp else "single",
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {tag}: {res['error']}", flush=True)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if "roofline" in res:
+            r = res["roofline"]
+            print(f"[ok] {tag} compile={res['compile_s']}s "
+                  f"dominant={r['dominant']} step={r['step_time_s']:.4f}s",
+                  flush=True)
+        elif "skipped" in res:
+            print(f"[skipped] {tag}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""End-to-end training driver.
+
+Brings up the full stack: a Sector deployment (security server, master,
+slaves, replication daemon), a synthetic corpus stored as Sector slices, the
+Sphere-scheduled data pipeline, the sharded train step, and Sector-backed
+checkpointing with async save + fault-injection restart.
+
+Example (CPU, ~100M model, a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \\
+      --smoke --steps 200 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config, ARCH_IDS
+from repro.data import SectorDataPipeline, synthetic_tokens, \
+    upload_token_dataset
+from repro.launch.mesh import dp_axes_of, make_host_mesh
+from repro.models import build
+from repro.sector import (Master, NodeAddress, ReplicationDaemon,
+                          SectorClient, SecurityServer, SlaveNode, Topology)
+from repro.train.checkpoint import SectorCheckpointer
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import init_train_state, jit_train_step
+
+
+def make_sector(root: str, num_slaves: int = 4, replication: int = 2):
+    sec = SecurityServer()
+    sec.add_user("trainer", "pw")
+    sec.allow_slaves("10.0.0.0/8")
+    master = Master(sec, replication_factor=replication)
+    topo = Topology(pods=1, racks=2, nodes_per_rack=(num_slaves + 1) // 2)
+    for i in range(num_slaves):
+        addr = topo.address_of(i)
+        master.register_slave(SlaveNode(
+            i, addr, os.path.join(root, f"slave{i}"), ip=f"10.0.0.{i + 1}"))
+    client = SectorClient(master, "trainer", "pw",
+                          client_addr=NodeAddress(0, 0, 0))
+    return master, client, ReplicationDaemon(master)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", type=int, default=1, help="data mesh axis")
+    ap.add_argument("--model", type=int, default=1, help="model mesh axis")
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build(cfg)
+    root = args.workdir or tempfile.mkdtemp(prefix="sector_")
+    master, client, daemon = make_sector(root)
+
+    # corpus -> Sector slices
+    toks = synthetic_tokens(args.batch * (args.seq + 1) * (args.steps + 8),
+                            cfg.vocab)
+    upload_token_dataset(client, "/corpus/train", toks, num_slices=8)
+    daemon.run_until_stable()
+    pipe = SectorDataPipeline(master, client, "/corpus/train",
+                              batch=args.batch, seq_len=args.seq)
+
+    mesh = make_host_mesh(args.data, args.model)
+    dp = dp_axes_of(mesh)
+    key = jax.random.PRNGKey(0)
+    _, p_specs = model.init(jax.random.PRNGKey(1))  # small: specs via init
+    params, opt = init_train_state(model, key, mesh, p_specs)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps)
+    from jax.sharding import PartitionSpec as P
+    b_specs = {"tokens": P(dp[0] if dp else None, None),
+               "labels": P(dp[0] if dp else None, None)}
+    step_fn, _ = jit_train_step(model, opt_cfg, mesh, p_specs, b_specs,
+                                dp_axes=dp or ("data",))
+
+    ckpt = SectorCheckpointer(client, "/ckpt/run0", num_slices=4)
+    it = iter(pipe)
+    t0 = time.time()
+    step = 0
+    losses = []
+    while step < args.steps:
+        try:
+            batch = next(it)
+        except StopIteration:
+            it = iter(pipe)
+            continue
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        step += 1
+        losses.append(float(metrics["loss"]))
+        if step % 10 == 0:
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time() - t0) / step:.3f}s/step)", flush=True)
+        if step % args.ckpt_every == 0:
+            ckpt.save(step, {"params": params, "opt": opt}, blocking=False)
+            daemon.tick()
+    ckpt.wait()
+    ckpt.save(args.steps, {"params": params, "opt": opt})
+    daemon.run_until_stable()
+    print(f"final loss {np.mean(losses[-10:]):.4f} "
+          f"(first10 {np.mean(losses[:10]):.4f}); "
+          f"checkpoints: {ckpt.list_steps()}")
+
+
+if __name__ == "__main__":
+    main()

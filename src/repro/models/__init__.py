@@ -1,0 +1,10 @@
+"""Model zoo: the assigned architectures as composable JAX modules.
+
+Everything is a pure pytree-of-arrays + functional apply (no framework
+dependency). ``registry.build(config)`` returns a :class:`Model` bundle with
+``init / train_loss / prefill / decode_step / init_cache / param_specs``.
+"""
+
+from repro.models.registry import build, Model
+
+__all__ = ["build", "Model"]

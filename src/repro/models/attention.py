@@ -1,0 +1,312 @@
+"""Attention variants: GQA/MQA (full causal), sliding-window (SWA), MLA
+(multi-head latent attention), cross-attention — with KV-cache decode paths.
+
+Cache contracts:
+- GQA:  {"k","v": (B, T_cache, KV, hd), "pos": (B, T_cache) int32}  where
+  ``pos`` holds the absolute position stored in each slot (-1 = empty). SWA
+  uses a **ring buffer** of T_cache = window slots, so a 500k-context danube
+  cache is O(window), not O(seq).
+- MLA:  {"ckv": (B, T, kv_rank), "k_rope": (B, T, rope_dim), "pos": (B, T)}
+  — the latent cache, (kv_rank + rope_dim) per position instead of
+  2*H*hd; ``absorb=True`` additionally computes scores in latent space
+  (weight absorption) so decode never materializes per-head K/V.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# -- init -----------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    if cfg.attn_type == "mla":
+        return _mla_init(key, cfg)
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * hd),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": dense_init(k4, cfg.n_heads * hd, cfg.d_model,
+                         scale=(cfg.n_heads * hd) ** -0.5),
+    }
+    # Measured sharding rules (EXPERIMENTS.md §Perf H2/H3, train_4k
+    # collective seconds on the 16x16 mesh):
+    #   KV % tp == 0            -> full head sharding (clean TP).
+    #   KV == 1,  H % tp == 0   -> q head-sharded, kv REPLICATED (granite:
+    #                              23.8 -> 17.6; split-dim kv makes XLA
+    #                              shard the score contraction).
+    #   1<KV<tp,  H % tp == 0   -> kv SPLIT-DIM column sharding (tinyllama
+    #                              2.0s / qwen3 1.9s; replicated kv + sharded
+    #                              q factorizes scores over (KV,G) and the
+    #                              backward full-remats: 103 GB/dev f32).
+    #   H % tp != 0             -> replicate all, SEQUENCE-PARALLEL in apply
+    #                              (internvl2 prefill: 58.3 -> 0.79s).
+    tp = cfg.tp_size
+    if cfg.n_heads % tp == 0:
+        qs = "model"
+        kvs = None if cfg.n_kv_heads == 1 else "model"
+        wos = "model"
+    else:
+        qs = kvs = wos = None
+    specs = {"wq": P(None, qs), "wk": P(None, kvs),
+             "wv": P(None, kvs), "wo": P(wos, None)}
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), jnp.float32)
+        params["k_norm"] = jnp.ones((hd,), jnp.float32)
+        specs["q_norm"] = P(None)
+        specs["k_norm"] = P(None)
+    return params, specs
+
+
+def _mla_init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    ks = jax.random.split(key, 7)
+    H = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    params = {
+        "wq_down": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), jnp.float32),
+        "wq_up": dense_init(ks[1], cfg.q_lora_rank, H * qd),
+        "wkv_down": dense_init(ks[2], cfg.d_model,
+                               cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+        "wk_up": dense_init(ks[3], cfg.kv_lora_rank, H * cfg.qk_nope_dim),
+        "wv_up": dense_init(ks[4], cfg.kv_lora_rank, H * cfg.v_head_dim),
+        "wo": dense_init(ks[5], H * cfg.v_head_dim, cfg.d_model,
+                         scale=(H * cfg.v_head_dim) ** -0.5),
+    }
+    # MLA: split-dim column sharding measured BETTER than seq-parallel
+    # (minicpm3 train_4k: 8.8s vs 14.2s) — the latent contraction keeps the
+    # score partial-sums small (kv_lora_rank, not S x T).
+    specs = {
+        "wq_down": P(None, None), "q_norm": P(None),
+        "wq_up": P(None, "model"),
+        "wkv_down": P(None, None), "kv_norm": P(None),
+        "wk_up": P(None, "model"), "wv_up": P(None, "model"),
+        "wo": P("model", None),
+    }
+    return params, specs
+
+
+def heads_shardable(cfg: ModelConfig) -> bool:
+    """True when apply() should NOT insert sequence-parallel constraints
+    (weights carry head/split-dim sharding instead)."""
+    return cfg.n_heads % cfg.tp_size == 0
+
+
+def _seq_shard(t, mesh, dp_axes):
+    """Sequence-parallel constraint for indivisible-head attention: shard the
+    q/score/out chain over S on the model axis (weights replicated, compute
+    still fully parallel — over sequence instead of heads)."""
+    if mesh is None or t.shape[1] <= 1:
+        return t
+    bs = (tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]) \
+        if t.shape[0] > 1 else None
+    spec = P(bs, "model", *([None] * (t.ndim - 2)))
+    return jax.lax.with_sharding_constraint(
+        t, jax.sharding.NamedSharding(mesh, spec))
+
+
+# -- shared score/combine core ----------------------------------------------------
+
+def _sdpa(q, k, v, q_pos, kv_pos, *, causal: bool, window: Optional[int],
+          scale: float, extra_score=None):
+    """q: (B,S,H,hd); k,v: (B,T,KV,*); q_pos (B,S); kv_pos (B,T).
+    Grouped-query attention with fp32 softmax; masks built from positions so
+    the same code serves train/prefill/ring-buffer decode."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(COMPUTE_DTYPE),
+                        k.astype(COMPUTE_DTYPE),
+                        preferred_element_type=jnp.float32) * scale
+    if extra_score is not None:
+        scores = scores + extra_score  # MLA rope-part scores (B,1|KV,G,S,T)
+    mask = kv_pos[:, None, :] >= 0                        # slot occupied
+    if causal:
+        mask = mask & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        mask = mask & (kv_pos[:, None, :] > q_pos[:, :, None] - window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, v.shape[-1]).astype(COMPUTE_DTYPE)
+
+
+def _cache_update(cache: Dict, new_k, new_v, q_pos):
+    """Write new entries into the (possibly ring) cache. new_k/new_v:
+    (B, S_new, KV, hd); q_pos: (B, S_new) absolute positions."""
+    T = cache["k"].shape[1]
+    slots = q_pos % T
+    b_idx = jnp.arange(new_k.shape[0])[:, None]
+    k = cache["k"].at[b_idx, slots].set(new_k.astype(cache["k"].dtype))
+    v = cache["v"].at[b_idx, slots].set(new_v.astype(cache["v"].dtype))
+    pos = cache["pos"].at[b_idx, slots].set(q_pos.astype(jnp.int32))
+    return {"k": k, "v": v, "pos": pos}
+
+
+# -- GQA / SWA ---------------------------------------------------------------------
+
+def attn_apply(params, x, cfg: ModelConfig, q_pos,
+               cache: Optional[Dict] = None, causal: bool = True,
+               cross_kv: Optional[Tuple] = None, rope: bool = True,
+               mesh=None, dp_axes=("data",)):
+    """Self- or cross-attention over x (B,S,d).
+
+    - training/prefill: cache=None -> keys/values from x itself.
+    - decode: cache given -> append then attend over the cache.
+    - cross: cross_kv=(k,v,kv_pos) precomputed from the encoder.
+    """
+    B, S, _ = x.shape
+    hd = cfg.hd
+    x = x.astype(COMPUTE_DTYPE)
+    q = (x @ params["wq"].astype(COMPUTE_DTYPE)).reshape(B, S, cfg.n_heads, hd)
+    if cross_kv is None:
+        k = (x @ params["wk"].astype(COMPUTE_DTYPE)).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (x @ params["wv"].astype(COMPUTE_DTYPE)).reshape(B, S, cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+        if rope:
+            q = apply_rope(q, q_pos, cfg.rope_theta)
+            k = apply_rope(k, q_pos, cfg.rope_theta)
+    else:
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+
+    window = cfg.window if cfg.attn_type == "swa" else None
+    scale = hd ** -0.5
+    if not heads_shardable(cfg):
+        q = _seq_shard(q, mesh, dp_axes)
+
+    if cross_kv is not None:
+        ck, cv, ckv_pos = cross_kv
+        out = _sdpa(q, ck, cv, q_pos, ckv_pos, causal=False, window=None,
+                    scale=scale)
+        new_cache = cache
+    elif cache is None:
+        out = _sdpa(q, k, v, q_pos, q_pos, causal=causal, window=window,
+                    scale=scale)
+        new_cache = None
+    else:
+        new_cache = _cache_update(cache, k, v, q_pos)
+        out = _sdpa(q, new_cache["k"], new_cache["v"], q_pos,
+                    new_cache["pos"], causal=causal, window=window,
+                    scale=scale)
+    if not heads_shardable(cfg):
+        out = _seq_shard(out, mesh, dp_axes)
+    out = out.reshape(B, S, cfg.n_heads * hd) @ params["wo"].astype(COMPUTE_DTYPE)
+    return out, new_cache
+
+
+def init_cache_gqa(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=COMPUTE_DTYPE) -> Dict:
+    T = min(max_len, cfg.window) if cfg.attn_type == "swa" else max_len
+    return {
+        "k": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.full((batch, T), -1, jnp.int32),
+    }
+
+
+# -- MLA -----------------------------------------------------------------------------
+
+def mla_apply(params, x, cfg: ModelConfig, q_pos,
+              cache: Optional[Dict] = None, absorb: bool = False,
+              mesh=None, dp_axes=("data",)):
+    """DeepSeek-V2-style multi-head latent attention (MiniCPM3).
+
+    The KV cache is the compressed latent (ckv, k_rope). ``absorb=False``
+    materializes per-head K/V from the latent (paper-faithful baseline);
+    ``absorb=True`` folds wk_up/wv_up into the query/output (decode
+    optimization — scores computed directly in latent space)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    x = x.astype(COMPUTE_DTYPE)
+
+    cq = rms_norm(x @ params["wq_down"].astype(COMPUTE_DTYPE), params["q_norm"],
+                  cfg.norm_eps)
+    q = (cq @ params["wq_up"].astype(COMPUTE_DTYPE)).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+
+    ckv_full = x @ params["wkv_down"].astype(COMPUTE_DTYPE)
+    ckv = rms_norm(ckv_full[..., :cfg.kv_lora_rank], params["kv_norm"],
+                   cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:].reshape(B, S, 1, rope_d)
+    k_rope = apply_rope(k_rope, q_pos, cfg.rope_theta)
+
+    if cache is not None:
+        T = cache["ckv"].shape[1]
+        slots = q_pos % T
+        b_idx = jnp.arange(B)[:, None]
+        cache = {
+            "ckv": cache["ckv"].at[b_idx, slots].set(
+                ckv.astype(cache["ckv"].dtype)),
+            "k_rope": cache["k_rope"].at[b_idx, slots].set(
+                k_rope[:, :, 0].astype(cache["k_rope"].dtype)),
+            "pos": cache["pos"].at[b_idx, slots].set(q_pos.astype(jnp.int32)),
+        }
+        ckv_t = cache["ckv"].astype(COMPUTE_DTYPE)
+        k_rope_t = cache["k_rope"][:, :, None].astype(COMPUTE_DTYPE)
+        kv_pos = cache["pos"]
+    else:
+        ckv_t, k_rope_t, kv_pos = ckv, k_rope, q_pos
+
+    scale = (nope + rope_d) ** -0.5
+    # rope-part scores (shared single kv head)
+    s_rope = jnp.einsum("bshr,btkr->bkst", q_rope.astype(COMPUTE_DTYPE),
+                        k_rope_t, preferred_element_type=jnp.float32)
+
+    if absorb:
+        # f32 operands: XLA:CPU's DotThunk rejects bf16xbf16->f32 for these
+        # contraction patterns; on TPU the f32 upcast is the flash-style
+        # accumulator anyway.
+        wk = params["wk_up"].astype(jnp.float32).reshape(cfg.kv_lora_rank, H, nope)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32), wk)
+        s_nope = jnp.einsum("bshr,btr->bhst", q_lat, ckv_t.astype(jnp.float32))
+        scores = (s_nope + s_rope) * scale          # (B,H,S,T)
+        mask = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv_t.astype(jnp.float32))
+        wv = params["wv_up"].astype(jnp.float32).reshape(cfg.kv_lora_rank, H, vh)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, wv).astype(COMPUTE_DTYPE)
+    else:
+        T = ckv_t.shape[1]
+        k_nope = (ckv_t @ params["wk_up"].astype(COMPUTE_DTYPE)).reshape(
+            B, T, H, nope)
+        val = (ckv_t @ params["wv_up"].astype(COMPUTE_DTYPE)).reshape(B, T, H, vh)
+        s_nope = jnp.einsum("bshn,bthn->bhst", q_nope.astype(COMPUTE_DTYPE),
+                            k_nope, preferred_element_type=jnp.float32)
+        scores = (s_nope + s_rope) * scale
+        mask = (kv_pos[:, None, :] >= 0) & (kv_pos[:, None, :] <= q_pos[:, :, None])
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(COMPUTE_DTYPE)
+        out = jnp.einsum("bhst,bthv->bshv", probs, val,
+                         preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+
+    out = out.reshape(B, S, H * vh) @ params["wo"].astype(COMPUTE_DTYPE)
+    return out, cache
+
+
+def init_cache_mla(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=COMPUTE_DTYPE) -> Dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }

@@ -1,0 +1,138 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, init helpers.
+
+Convention: parameters are nested dicts of fp32 arrays; forward casts to
+bf16 for matmuls (MXU) and keeps norms/softmax accumulation in fp32.
+Each init helper returns ``(params, specs)`` where ``specs`` mirrors the
+params pytree with ``PartitionSpec`` leaves ("model"-axis tensor parallel).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return w
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(COMPUTE_DTYPE)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (encoder)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d_model // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- MLP -----------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if gated:
+        params = {
+            "w_gate": dense_init(k1, d_model, d_ff),
+            "w_up": dense_init(k2, d_model, d_ff),
+            "w_down": dense_init(k3, d_ff, d_model, scale=d_ff ** -0.5),
+        }
+        specs = {"w_gate": P(None, "model"), "w_up": P(None, "model"),
+                 "w_down": P("model", None)}
+    else:
+        params = {
+            "w_up": dense_init(k2, d_model, d_ff),
+            "w_down": dense_init(k3, d_ff, d_model, scale=d_ff ** -0.5),
+        }
+        specs = {"w_up": P(None, "model"), "w_down": P("model", None)}
+    return params, specs
+
+
+def mlp_apply(params, x: jnp.ndarray, gated: bool = True) -> jnp.ndarray:
+    x = x.astype(COMPUTE_DTYPE)
+    up = x @ params["w_up"].astype(COMPUTE_DTYPE)
+    if gated:
+        gate = x @ params["w_gate"].astype(COMPUTE_DTYPE)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"].astype(COMPUTE_DTYPE)
+
+
+# -- embeddings ------------------------------------------------------------------
+
+VOCAB_PAD = 128  # lane-aligned AND divisible by the model axis (16)
+
+
+def padded_vocab(vocab: int) -> int:
+    return (vocab + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD
+
+
+def embed_init(key, vocab: int, d_model: int):
+    """Embedding table padded to a multiple of 128 rows so the vocab axis
+    shards evenly over the model axis (published vocabs like 73448/51865/
+    151655 are not divisible by 16). Padding rows are zero and their logits
+    are masked to -inf in :func:`lm_logits`."""
+    v_pad = padded_vocab(vocab)
+    emb = jax.random.normal(key, (v_pad, d_model), jnp.float32) \
+        * (d_model ** -0.5)
+    emb = emb.at[vocab:].set(0.0)
+    return emb, P("model", None)  # vocab-sharded
+
+
+def embed_lookup(emb: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(emb.astype(COMPUTE_DTYPE), tokens, axis=0)
+
+
+def lm_logits(emb: jnp.ndarray, x: jnp.ndarray, cap: float = 0.0,
+              vocab: Optional[int] = None) -> jnp.ndarray:
+    """Tied-embedding readout; fp32 logits (padded-vocab sharded). Padding
+    columns are masked to -1e30 so softmax/argmax never see them."""
+    logits = (x.astype(COMPUTE_DTYPE) @ emb.astype(COMPUTE_DTYPE).T).astype(jnp.float32)
+    if cap > 0.0:
+        logits = cap * jnp.tanh(logits / cap)
+    if vocab is not None and vocab < emb.shape[0]:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < vocab, logits, -1e30)
+    return logits
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean cross-entropy over (optionally masked) positions; fp32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

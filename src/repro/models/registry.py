@@ -1,0 +1,232 @@
+"""Arch registry: build(config) -> Model bundle.
+
+The bundle exposes a uniform surface for the trainer, server and dry-run:
+
+  init(key)                 -> (params, param_specs)
+  train_loss(params, batch) -> (loss, metrics)           [kind=train]
+  prefill(params, batch)    -> (logits, caches)          [kind=prefill]
+  decode_step(params, caches, batch) -> (logits, caches) [kind=decode]
+  init_caches(batch, max_len)
+  input_specs(shape)        -> dict of ShapeDtypeStructs (+ batch sharding)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES
+from repro.models import encdec, transformer
+from repro.models.layers import COMPUTE_DTYPE
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable            # (params, batch, mesh, dp_axes)
+    prefill: Callable               # (params, batch, caches, mesh, dp_axes)
+    decode_step: Callable           # (params, caches, batch, mesh, dp_axes)
+    init_caches: Callable           # (batch, max_len)
+    input_specs: Callable           # (shape_name) -> dict of SDS
+    batch_specs: Callable           # (shape_name, dp) -> dict of PartitionSpec
+    cache_specs: Callable           # (shape_name, dp) -> pytree of P
+
+
+def _token_sds(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _dp(b: int, dp_axes) -> Any:
+    """Batch-dim sharding entry: the dp axes when the batch is shardable."""
+    return None if b <= 1 else (tuple(dp_axes) if len(dp_axes) > 1
+                                else dp_axes[0])
+
+
+def _kv_spec(cfg: ModelConfig, tp: int = 16):
+    return "model" if cfg.n_kv_heads % tp == 0 else None
+
+
+def _layer_cache_spec(cfg: ModelConfig, kind: str, b, dp_axes,
+                      shard_t: bool = False):
+    """PartitionSpec dict for one layer's cache."""
+    bs = _dp(b, dp_axes)
+    tspec = (tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]) \
+        if shard_t else None
+    if kind in ("dense", "moe", "shared_attn"):
+        if cfg.attn_type == "mla":
+            return {"ckv": P(bs, tspec, None), "k_rope": P(bs, tspec, None),
+                    "pos": P(bs, tspec)}
+        kv = _kv_spec(cfg)
+        return {"k": P(bs, tspec, kv, None), "v": P(bs, tspec, kv, None),
+                "pos": P(bs, tspec)}
+    if kind == "mamba":
+        from repro.models.ssm import mamba2_dims
+        _, h, _ = mamba2_dims(cfg)
+        hs = "model" if h % 16 == 0 else None
+        return {"ssm": P(bs, hs, None, None),
+                "conv_x": P(bs, None, "model"),
+                "conv_bc": P(bs, None, None)}
+    if kind == "mlstm":
+        from repro.models.ssm import mlstm_dims
+        _, h, _ = mlstm_dims(cfg)
+        hs = "model" if h % 16 == 0 else None
+        return {"C": P(bs, hs, None, None), "n": P(bs, hs, None),
+                "m": P(bs, hs), "conv": P(bs, None, "model")}
+    if kind == "slstm":
+        h = cfg.ssm_heads or cfg.n_heads
+        hs = "model" if h % 16 == 0 else None
+        return {k: P(bs, hs, None) for k in ("c", "n", "h", "m")}
+    raise ValueError(kind)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+# -- decoder-only LMs (incl. moe / ssm / hybrid / vlm) ----------------------------
+
+def _build_lm(cfg: ModelConfig) -> Model:
+    def init(key):
+        return transformer.init_params(key, cfg)
+
+    def train_loss(params, batch, mesh=None, dp_axes=("data",)):
+        return transformer.train_loss(params, cfg, batch, mesh, dp_axes)
+
+    def prefill(params, batch, caches, mesh=None, dp_axes=("data",)):
+        # q_pos covers img_tokens + text (built inside lm_forward from the
+        # full embedded length); only next-token logits are materialized.
+        logits, caches, _ = transformer.lm_forward(
+            params, cfg, batch["tokens"], q_pos=None, caches=caches,
+            mesh=mesh, dp_axes=dp_axes,
+            img_embeds=batch.get("img_embeds"), last_only=True)
+        return logits, caches
+
+    def decode_step(params, caches, batch, mesh=None, dp_axes=("data",)):
+        tokens = batch["tokens"]                       # (B, 1)
+        q_pos = batch["pos"]                           # (B, 1) int32
+        logits, caches, _ = transformer.lm_forward(
+            params, cfg, tokens, q_pos=q_pos, caches=caches, mesh=mesh,
+            dp_axes=dp_axes)
+        return logits, caches
+
+    def init_caches(batch, max_len):
+        return transformer.init_caches(cfg, batch, max_len)
+
+    def input_specs(shape_name: str) -> Dict[str, Any]:
+        sp = SHAPES[shape_name]
+        b = sp.global_batch
+        if sp.kind == "train":
+            s = sp.seq_len
+            out = {"tokens": _token_sds(b, s), "labels": _token_sds(b, s)}
+            if cfg.family == "vlm":
+                s_text = s - cfg.img_tokens
+                out = {"tokens": _token_sds(b, s_text),
+                       "labels": _token_sds(b, s_text),
+                       "img_embeds": jax.ShapeDtypeStruct(
+                           (b, cfg.img_tokens, cfg.d_model), COMPUTE_DTYPE)}
+            return out
+        if sp.kind == "prefill":
+            out = {"tokens": _token_sds(b, sp.seq_len)}
+            if cfg.family == "vlm":
+                out = {"tokens": _token_sds(b, sp.seq_len - cfg.img_tokens),
+                       "img_embeds": jax.ShapeDtypeStruct(
+                           (b, cfg.img_tokens, cfg.d_model), COMPUTE_DTYPE)}
+            return out
+        # decode: one new token against a cache of seq_len
+        return {"tokens": _token_sds(b, 1),
+                "pos": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    def batch_specs(shape_name: str, dp=("pod", "data")) -> Dict[str, Any]:
+        sp = SHAPES[shape_name]
+        bs = _dp(sp.global_batch, dp)
+        specs = {"tokens": P(bs, None), "labels": P(bs, None),
+                 "pos": P(bs, None), "img_embeds": P(bs, None, None)}
+        return {k: specs[k] for k in input_specs(shape_name)}
+
+    def cache_specs(shape_name: str, dp=("pod", "data")):
+        sp = SHAPES[shape_name]
+        b = sp.global_batch
+        shard_t = (b == 1 and cfg.attn_type != "swa")  # long-context: shard T
+        pattern = transformer.layer_pattern(cfg)
+        from repro.models.transformer import _shared_attn_points
+        shared_pts = _shared_attn_points(cfg)
+        homogeneous = cfg.scan_layers and len(set(pattern)) == 1 \
+            and pattern[0] in ("dense", "moe") and not shared_pts
+        if homogeneous:
+            one = _layer_cache_spec(cfg, pattern[0], b, dp, shard_t)
+            return jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
+                                is_leaf=lambda x: isinstance(x, P))
+        specs = [_layer_cache_spec(cfg, k, b, dp, shard_t) for k in pattern]
+        for _ in shared_pts:
+            specs.append(_layer_cache_spec(cfg, "shared_attn", b, dp, shard_t))
+        return specs
+
+    return Model(cfg, init, train_loss, prefill, decode_step, init_caches,
+                 input_specs, batch_specs, cache_specs)
+
+
+# -- whisper (enc-dec) --------------------------------------------------------------
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def init(key):
+        return encdec.init_params(key, cfg)
+
+    def train_loss(params, batch, mesh=None, dp_axes=("data",)):
+        return encdec.train_loss(params, cfg, batch, mesh, dp_axes)
+
+    def prefill(params, batch, caches, mesh=None, dp_axes=("data",)):
+        enc_out = encdec.encode(params, cfg, batch["frames"])
+        logits, caches = encdec.decode_stack(params, cfg, batch["tokens"],
+                                             enc_out, caches=caches)
+        return logits, caches
+
+    def decode_step(params, caches, batch, mesh=None, dp_axes=("data",)):
+        # enc_out recomputed from stub frames would be wasteful; serve path
+        # carries it in the batch.
+        logits, caches = encdec.decode_stack(
+            params, cfg, batch["tokens"], batch["enc_out"],
+            q_pos=batch["pos"], caches=caches)
+        return logits, caches
+
+    def init_caches(batch, max_len):
+        return encdec.init_caches(cfg, batch, max_len)
+
+    def input_specs(shape_name: str) -> Dict[str, Any]:
+        sp = SHAPES[shape_name]
+        b = sp.global_batch
+        frames = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                      COMPUTE_DTYPE)
+        if sp.kind == "train":
+            return {"frames": frames,
+                    "tokens": _token_sds(b, sp.seq_len),
+                    "labels": _token_sds(b, sp.seq_len)}
+        if sp.kind == "prefill":
+            return {"frames": frames, "tokens": _token_sds(b, sp.seq_len)}
+        return {"tokens": _token_sds(b, 1),
+                "pos": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "enc_out": jax.ShapeDtypeStruct(
+                    (b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE)}
+
+    def batch_specs(shape_name: str, dp=("pod", "data")) -> Dict[str, Any]:
+        sp = SHAPES[shape_name]
+        bs = _dp(sp.global_batch, dp)
+        specs = {"frames": P(bs, None, None), "tokens": P(bs, None),
+                 "labels": P(bs, None), "pos": P(bs, None),
+                 "enc_out": P(bs, None, None)}
+        return {k: specs[k] for k in input_specs(shape_name)}
+
+    def cache_specs(shape_name: str, dp=("pod", "data")):
+        sp = SHAPES[shape_name]
+        one = _layer_cache_spec(cfg, "dense", sp.global_batch, dp)
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return Model(cfg, init, train_loss, prefill, decode_step, init_caches,
+                 input_specs, batch_specs, cache_specs)

@@ -1,0 +1,477 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) for zamba2, mLSTM + sLSTM
+for xlstm.
+
+All train/prefill paths are chunk-parallel (quadratic only within a chunk,
+linear across chunks via a `lax.scan` over chunk states); decode paths are
+O(1)-state recurrent steps — which is why these families run the
+``long_500k`` shape that full attention skips.
+
+Cache contracts:
+- mamba2: {"ssm": (B,H,P,N) fp32, "conv_x": (B,K-1,d_in),
+          "conv_bc": (B,K-1,2N)}
+- mLSTM:  {"C": (B,H,P,P) fp32, "n": (B,H,P), "m": (B,H)}
+- sLSTM:  {"c","n","h": (B,H,P), "m": (B,H,P)}
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, dense_init, rms_norm
+
+
+# =============================== Mamba2 (SSD) ===================================
+
+def mamba2_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    head_p = 64
+    n_heads = max(d_in // head_p, 1)
+    head_p = d_in // n_heads
+    return d_in, n_heads, head_p
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    """Projections are SPLIT by component (§Perf zamba2 iteration): a fused
+    (z,x,B,C,dt) in_proj puts the z/x/B/C/dt slice boundaries inside shards
+    of the column-sharded output — measured ~1.8 GB/2-layers of backward
+    collective-permutes on zamba2 train_4k. Splitting keeps z/x exactly
+    shard-aligned (2*d_in divides the model axis) and replicates the tiny
+    B/C/dt projections (d x (2N+H))."""
+    d = cfg.d_model
+    d_in, H, Pdim = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    params = {
+        "in_zx": dense_init(ks[0], d, 2 * d_in),       # [z | x], aligned
+        "in_bcdt": dense_init(ks[3], d, 2 * N + H),    # [B | C | dt], small
+        "conv_x": jax.random.normal(ks[1], (cfg.conv_kernel, d_in),
+                                    jnp.float32) * 0.1,
+        "conv_x_b": jnp.zeros((d_in,), jnp.float32),
+        "conv_bc": jax.random.normal(ks[4], (cfg.conv_kernel, 2 * N),
+                                     jnp.float32) * 0.1,
+        "conv_bc_b": jnp.zeros((2 * N,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2))),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d, scale=d_in ** -0.5),
+    }
+    specs = {
+        "in_zx": P(None, "model"), "in_bcdt": P(None, None),
+        "conv_x": P(None, "model"), "conv_x_b": P("model",),
+        "conv_bc": P(None, None), "conv_bc_b": P(None),
+        "a_log": P(None), "d_skip": P(None),
+        "dt_bias": P(None), "norm": P("model",),
+        "out_proj": P("model", None),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,L,C); w: (K,C). state: (B,K-1,C) carry.
+    Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def mamba2_apply(params, x, cfg: ModelConfig, cache: Dict | None = None):
+    """x: (B, L, d). Returns (y (B,L,d), new_cache)."""
+    B, L, _ = x.shape
+    d_in, H, Pdim = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    xc = x.astype(COMPUTE_DTYPE)
+    zx = xc @ params["in_zx"].astype(COMPUTE_DTYPE)
+    z, xi = zx[..., :d_in], zx[..., d_in:]
+    bcdt = xc @ params["in_bcdt"].astype(COMPUTE_DTYPE)
+    bc, dt_raw = bcdt[..., :2 * N], bcdt[..., 2 * N:]
+    conv_x_state = cache["conv_x"] if cache is not None else None
+    conv_bc_state = cache["conv_bc"] if cache is not None else None
+    xi, new_conv_x = _causal_conv(xi, params["conv_x"].astype(COMPUTE_DTYPE),
+                                  params["conv_x_b"].astype(COMPUTE_DTYPE),
+                                  conv_x_state)
+    bc, new_conv_bc = _causal_conv(bc,
+                                   params["conv_bc"].astype(COMPUTE_DTYPE),
+                                   params["conv_bc_b"].astype(COMPUTE_DTYPE),
+                                   conv_bc_state)
+    xs = xi.reshape(B, L, H, Pdim)
+    Bs = bc[..., :N]
+    Cs = bc[..., N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                  # (B,L,H)
+    A = -jnp.exp(params["a_log"])                              # (H,) negative
+
+    ssm_state = cache["ssm"] if cache is not None else None
+    if L == 1 and cache is not None:
+        y, new_ssm = _ssd_step(xs[:, 0], Bs[:, 0], Cs[:, 0], dt[:, 0], A,
+                               params["d_skip"], ssm_state)
+        y = y[:, None]
+    else:
+        y, new_ssm = _ssd_chunked(xs, Bs, Cs, dt, A, params["d_skip"],
+                                  cfg.chunk_size, ssm_state)
+    y = y.reshape(B, L, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE),
+                 params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(COMPUTE_DTYPE)
+    new_cache = ({"ssm": new_ssm, "conv_x": new_conv_x,
+                  "conv_bc": new_conv_bc}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def _ssd_step(x, Bv, Cv, dt, A, d_skip, state):
+    """One decode step. x: (B,H,P); Bv/Cv: (B,N); dt: (B,H); state (B,H,P,N)."""
+    decay = jnp.exp(dt * A)                                    # (B,H)
+    dx = dt[..., None] * x.astype(jnp.float32)                 # (B,H,P)
+    upd = dx[..., None] * Bv[:, None, None, :].astype(jnp.float32)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv.astype(jnp.float32))
+    y = y + d_skip[None, :, None] * x.astype(jnp.float32)
+    return y.astype(COMPUTE_DTYPE), state
+
+
+def _ssd_chunked(xs, Bs, Cs, dt, A, d_skip, Q, init_state=None):
+    """Chunked SSD (Mamba2). xs: (B,L,H,P); Bs/Cs: (B,L,N); dt: (B,L,H).
+    Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    B, L, H, Pdim = xs.shape
+    N = Bs.shape[-1]
+    pad = (-L) % Q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    C = Lp // Q
+
+    def resh(t, trailing):
+        return t.reshape((B, C, Q) + trailing)
+
+    xs_c = resh(xs, (H, Pdim)).astype(jnp.float32)
+    Bs_c = resh(Bs, (N,)).astype(jnp.float32)
+    Cs_c = resh(Cs, (N,)).astype(jnp.float32)
+    dt_c = resh(dt, (H,)).astype(jnp.float32)
+
+    a = dt_c * A                                               # (B,C,Q,H)
+    cum_a = jnp.cumsum(a, axis=2)
+    # intra-chunk: decay[t,s] = exp(cum_a[t] - cum_a[s]) for t >= s
+    diff = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]   # (B,C,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cs_c, Bs_c)             # (B,C,Q,Q)
+    w = cb[..., None] * decay * dt_c[:, :, None, :, :]         # (B,C,Q,Q,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w, xs_c)
+
+    # per-chunk state contribution: S_c = sum_s exp(cumQ - cum_a[s]) dt_s B_s x_s
+    decay_out = jnp.exp(cum_a[:, :, -1:, :] - cum_a)           # (B,C,Q,H)
+    sx = xs_c * (dt_c * decay_out)[..., None]                  # (B,C,Q,H,P)
+    s_local = jnp.einsum("bcqhp,bcqn->bchpn", sx, Bs_c)        # (B,C,H,P,N)
+    chunk_decay = jnp.exp(cum_a[:, :, -1, :])                  # (B,C,H)
+
+    def scan_fn(carry, inp):
+        s_loc, cd = inp                                        # (B,H,P,N),(B,H)
+        new = carry * cd[..., None, None] + s_loc
+        return new, carry                                      # emit state BEFORE chunk
+
+    init = (jnp.zeros((B, H, Pdim, N), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (B,C,H,P,N)
+
+    # inter-chunk: y_t += C_t . (exp(cum_a[t]) * S_prev)
+    c_decay = jnp.exp(cum_a)                                   # (B,C,Q,H)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cs_c, prev_states) \
+        * c_decay[..., None]
+    y = y_intra + y_inter + d_skip[None, None, None, :, None] * xs_c
+    y = y.reshape(B, Lp, H, Pdim)[:, :L]
+    return y.astype(COMPUTE_DTYPE), final_state
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d_in, H, Pdim = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, Pdim, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.conv_kernel - 1, d_in),
+                            COMPUTE_DTYPE),
+        "conv_bc": jnp.zeros((batch, cfg.conv_kernel - 1, 2 * N),
+                             COMPUTE_DTYPE),
+    }
+
+
+# ================================= mLSTM ========================================
+
+def mlstm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    Pdim = d_in // H
+    return d_in, H, Pdim
+
+
+def mlstm_init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    d_in, H, Pdim = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "up_proj": dense_init(ks[0], d, 2 * d_in),     # [z, x]
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_kernel, d_in),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "wqkv": dense_init(ks[2], d_in, 3 * d_in),
+        "wif": dense_init(ks[3], d_in, 2 * H, scale=0.02),
+        "if_bias": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "down_proj": dense_init(ks[4], d_in, d, scale=d_in ** -0.5),
+    }
+    specs = {
+        "up_proj": P(None, "model"), "conv_w": P(None, "model"),
+        "conv_b": P("model",), "wqkv": P("model", None), "wif": P("model", None),
+        "if_bias": P(None), "norm": P("model",), "down_proj": P("model", None),
+    }
+    return params, specs
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, Q: int, init_state=None):
+    """Stabilized chunk-parallel mLSTM (flash-linear-attention style).
+
+    q,k,v: (B,L,H,P); log_i/log_f: (B,L,H). Quadratic only within chunks of
+    length Q; a scan carries the stabilized matrix state across chunks.
+
+    Derivation (DESIGN.md §4 / xLSTM eq. stabilization): with local
+    cumulative log-forget b[t] and local running max of (log_i[s] - b[s]),
+    m_t = max(m_prev + b[t], b[t] + localmax[t]); the inter-chunk
+    contribution decays by exp(b[t] + m_prev - m_t) and intra-chunk weights
+    are exp(b[t] - b[s] + log_i[s] - m_t).
+
+    Returns (y (B,L,H,P), state dict {C,n,m}).
+    """
+    B, L, H, Pd = q.shape
+    pad = (-L) % Q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    C = Lp // Q
+
+    def resh(t, trail):
+        return jnp.moveaxis(t.reshape((B, C, Q) + trail), 1, 0)
+
+    qc = resh(q.astype(jnp.float32) * (Pd ** -0.5), (H, Pd))   # (C,B,Q,H,P)
+    kc = resh(k.astype(jnp.float32), (H, Pd))
+    vc = resh(v.astype(jnp.float32), (H, Pd))
+    lic = resh(log_i.astype(jnp.float32), (H,))                # (C,B,Q,H)
+    lfc = resh(log_f.astype(jnp.float32), (H,))
+
+    if init_state is None:
+        init_state = {
+            "C": jnp.zeros((B, H, Pd, Pd), jnp.float32),
+            "n": jnp.zeros((B, H, Pd), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32),
+        }
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(carry, inp):
+        Cm, nv, m_prev = carry["C"], carry["n"], carry["m"]
+        qq, kk, vv, li, lf = inp
+        b = jnp.cumsum(lf, axis=1)                             # (B,Q,H)
+        g = li - b                                             # (B,Q,H)
+        localmax = jax.lax.cummax(g, axis=1)
+        m_t = jnp.maximum(m_prev[:, None] + b, b + localmax)   # (B,Q,H)
+        inter_decay = jnp.exp(b + m_prev[:, None] - m_t)       # (B,Q,H)
+        # intra weights: (B,Q,Q,H) for t >= s
+        dlog = b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :] \
+            - m_t[:, :, None, :]
+        w = jnp.where(tri[None, :, :, None], jnp.exp(dlog), 0.0)
+        s = jnp.einsum("bthp,bshp->btsh", qq, kk)
+        sw = s * w
+        y_intra = jnp.einsum("btsh,bshp->bthp", sw, vv)
+        # state layout: Cm[p, n] = sum_s v_p k_n — contract q against the
+        # *key* index n, producing the value index p.
+        y_inter = jnp.einsum("bthn,bhpn->bthp", qq, Cm) * inter_decay[..., None]
+        n_intra = jnp.sum(sw, axis=2)                          # scalar part via k
+        n_inter = jnp.einsum("bthp,bhp->bth", qq, nv) * inter_decay
+        den = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_t))
+        y = (y_intra + y_inter) / den[..., None]
+
+        # end-of-chunk state
+        m_end = m_t[:, -1]                                     # (B,H)
+        b_end = b[:, -1]                                       # (B,H)
+        carry_decay = jnp.exp(b_end + m_prev - m_end)          # (B,H)
+        upd_w = jnp.exp(b_end[:, None] - b + li - m_end[:, None])  # (B,Q,H)
+        C_new = Cm * carry_decay[..., None, None] + jnp.einsum(
+            "bshp,bshn->bhpn", vv * upd_w[..., None], kk)
+        n_new = nv * carry_decay[..., None] + jnp.einsum(
+            "bsh,bshp->bhp", upd_w, kk)
+        return ({"C": C_new, "n": n_new, "m": m_end},
+                y.astype(COMPUTE_DTYPE))
+
+    final, ys = jax.lax.scan(body, init_state, (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Lp, H, Pd)[:, :L]
+    return y, final
+
+
+def _mlstm_step(q, k, v, log_i, log_f, cache):
+    """Recurrent step. q,k,v: (B,H,P); log_i/log_f: (B,H)."""
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_eff = jnp.exp(log_f + m - m_new)
+    i_eff = jnp.exp(log_i - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = C * f_eff[..., None, None] + i_eff[..., None, None] \
+        * (vf[..., :, None] * kf[..., None, :])               # (B,H,P,P)
+    n = n * f_eff[..., None] + i_eff[..., None] * kf
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    num = jnp.einsum("bhpq,bhq->bhp", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qf)),
+                      jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y.astype(COMPUTE_DTYPE), {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, cache: Dict | None = None):
+    B, L, _ = x.shape
+    d_in, H, Pdim = mlstm_dims(cfg)
+    up = x.astype(COMPUTE_DTYPE) @ params["up_proj"].astype(COMPUTE_DTYPE)
+    z, xi = up[..., :d_in], up[..., d_in:]
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, params["conv_w"].astype(COMPUTE_DTYPE),
+                                params["conv_b"].astype(COMPUTE_DTYPE),
+                                conv_state)
+    qkv = xi @ params["wqkv"].astype(COMPUTE_DTYPE)
+    q, k, v = [t.reshape(B, L, H, Pdim) for t in jnp.split(qkv, 3, axis=-1)]
+    gates = (xi @ params["wif"].astype(COMPUTE_DTYPE)).astype(jnp.float32) \
+        + params["if_bias"]
+    log_i = jnp.minimum(gates[..., :H], 15.0)   # exponential input gate (capped)
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+
+    if L == 1 and cache is not None:
+        y, new_rec = _mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                 log_i[:, 0], log_f[:, 0],
+                                 {k_: cache[k_] for k_ in ("C", "n", "m")})
+        y = y[:, None]
+    else:
+        init = ({k_: cache[k_] for k_ in ("C", "n", "m")}
+                if cache is not None else None)
+        y, new_rec = _mlstm_chunked(q, k, v, log_i, log_f, cfg.chunk_size,
+                                    init)
+        if cache is None:
+            new_rec = None
+
+    y = y.reshape(B, L, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE),
+                 params["norm"], cfg.norm_eps)
+    out = y @ params["down_proj"].astype(COMPUTE_DTYPE)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(new_rec or {}, conv=new_conv)
+    return out, new_cache
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d_in, H, Pdim = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, Pdim, Pdim), jnp.float32),
+        "n": jnp.zeros((batch, H, Pdim), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_in), COMPUTE_DTYPE),
+    }
+
+
+# ================================= sLSTM ========================================
+
+def slstm_init(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    Pdim = d // H
+    ks = jax.random.split(key, 3)
+    params = {
+        # gates i,f,z,o from input
+        "w_gates": dense_init(ks[0], d, 4 * d),
+        # recurrent per-head block-diagonal weights (H, P, 4P)
+        "r_gates": jax.random.normal(ks[1], (H, Pdim, 4 * Pdim), jnp.float32)
+                   * (Pdim ** -0.5),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]),
+        "norm": jnp.ones((d,), jnp.float32),
+        "out_proj": dense_init(ks[2], d, d, scale=d ** -0.5),
+    }
+    specs = {"w_gates": P(None, "model"), "r_gates": P(None, None, None),
+             "gate_bias": P(None), "norm": P(None),
+             "out_proj": P(None, "model")}
+    return params, specs
+
+
+def slstm_apply(params, x, cfg: ModelConfig, cache: Dict | None = None):
+    """Sequential scan over time (sLSTM has true recurrence; no parallel form
+    exists — DESIGN.md notes this). x: (B,L,d)."""
+    B, L, d = x.shape
+    H = cfg.ssm_heads or cfg.n_heads
+    Pd = d // H
+    wx = (x.astype(COMPUTE_DTYPE) @ params["w_gates"].astype(COMPUTE_DTYPE)
+          ).astype(jnp.float32) + params["gate_bias"]           # (B,L,4d)
+    wx = wx.reshape(B, L, 4, H, Pd)
+
+    if cache is None:
+        state = {
+            "c": jnp.zeros((B, H, Pd), jnp.float32),
+            "n": jnp.ones((B, H, Pd), jnp.float32),
+            "h": jnp.zeros((B, H, Pd), jnp.float32),
+            "m": jnp.zeros((B, H, Pd), jnp.float32),
+        }
+    else:
+        state = cache
+
+    r = params["r_gates"]                                       # (H,P,4P)
+
+    def step(st, wxt):
+        rh = jnp.einsum("bhp,hpq->bhq", st["h"], r).reshape(B, H, 4, Pd)
+        rh = jnp.moveaxis(rh, 2, 0)                             # (4,B,H,P)
+        pre_i = wxt[:, 0] + rh[0]
+        pre_f = wxt[:, 1] + rh[1]
+        pre_z = wxt[:, 2] + rh[2]
+        pre_o = wxt[:, 3] + rh[3]
+        m_new = jnp.maximum(pre_f + st["m"], pre_i)
+        i_g = jnp.exp(pre_i - m_new)
+        f_g = jnp.exp(pre_f + st["m"] - m_new)
+        z_g = jnp.tanh(pre_z)
+        o_g = jax.nn.sigmoid(pre_o)
+        c = f_g * st["c"] + i_g * z_g
+        n = f_g * st["n"] + i_g
+        h = o_g * c / jnp.maximum(n, 1.0)
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    wx_t = jnp.moveaxis(wx, 1, 0)                               # (L,B,4,H,P)
+    state, hs = jax.lax.scan(step, state, wx_t)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, L, d)                 # (B,L,d)
+    y = rms_norm(y.astype(COMPUTE_DTYPE), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(COMPUTE_DTYPE)
+    new_cache = state if cache is not None else None
+    return out, new_cache
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    H = cfg.ssm_heads or cfg.n_heads
+    Pd = cfg.d_model // H
+    return {
+        "c": jnp.zeros((batch, H, Pd), jnp.float32),
+        "n": jnp.ones((batch, H, Pd), jnp.float32),
+        "h": jnp.zeros((batch, H, Pd), jnp.float32),
+        "m": jnp.zeros((batch, H, Pd), jnp.float32),
+    }

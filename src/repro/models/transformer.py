@@ -1,0 +1,328 @@
+"""Decoder-only LM assembly: block patterns, scan-over-layers, remat, caches.
+
+A *block pattern* maps each layer to a kind:
+  dense  — attention (gqa/swa/mla) + MLP
+  moe    — attention + MoE FFN (sphere-shuffle dispatch)
+  mamba  — Mamba2 SSD block (zamba2)
+  shared_attn — zamba2's weight-shared transformer block (applied between
+                mamba blocks; weights stored once)
+  mlstm / slstm — xLSTM blocks
+
+Homogeneous stacks (all dense / all moe) are scanned with stacked params
+(compile time ~O(1) in depth); heterogeneous stacks run as Python loops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (COMPUTE_DTYPE, embed_init, embed_lookup,
+                                 lm_logits, mlp_apply, mlp_init, rms_norm,
+                                 softmax_xent)
+
+
+def layer_pattern(cfg: ModelConfig) -> List[str]:
+    if cfg.family == "moe":
+        return ["moe"] * cfg.num_layers
+    if cfg.family == "ssm":        # xlstm
+        return ["slstm" if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0
+                else "mlstm" for i in range(cfg.num_layers)]
+    if cfg.family == "hybrid":     # zamba2
+        return ["mamba"] * cfg.num_layers
+    return ["dense"] * cfg.num_layers
+
+
+def _shared_attn_points(cfg: ModelConfig) -> List[int]:
+    if cfg.family != "hybrid" or not cfg.attn_every:
+        return []
+    return [i for i in range(cfg.num_layers)
+            if (i + 1) % cfg.attn_every == 0]
+
+
+# -- init -----------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("dense", "moe", "shared_attn"):
+        a_params, a_specs = attn.attn_init(k1, cfg) if cfg.attn_type != "mla" \
+            else attn.attn_init(k1, cfg)
+        params = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                  "attn": a_params,
+                  "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+        specs = {"ln1": P(None), "attn": a_specs, "ln2": P(None)}
+        if kind == "moe":
+            m_params, m_specs = moe_mod.moe_init(k2, cfg)
+            params["moe"] = m_params
+            specs["moe"] = m_specs
+        else:
+            d_ff = cfg.d_ff
+            m_params, m_specs = mlp_init(k2, cfg.d_model, d_ff, cfg.mlp_gated)
+            params["mlp"] = m_params
+            specs["mlp"] = m_specs
+        return params, specs
+    if kind == "mamba":
+        p, s = ssm.mamba2_init(k1, cfg)
+        return ({"ln1": jnp.ones((cfg.d_model,), jnp.float32), "mamba": p},
+                {"ln1": P(None), "mamba": s})
+    if kind == "mlstm":
+        p, s = ssm.mlstm_init(k1, cfg)
+        return ({"ln1": jnp.ones((cfg.d_model,), jnp.float32), "cell": p},
+                {"ln1": P(None), "cell": s})
+    if kind == "slstm":
+        p, s = ssm.slstm_init(k1, cfg)
+        return ({"ln1": jnp.ones((cfg.d_model,), jnp.float32), "cell": p},
+                {"ln1": P(None), "cell": s})
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    pattern = layer_pattern(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    emb, emb_spec = embed_init(keys[0], cfg.vocab, cfg.d_model)
+    params: Dict[str, Any] = {"embed": emb,
+                              "final_ln": jnp.ones((cfg.d_model,), jnp.float32)}
+    specs: Dict[str, Any] = {"embed": emb_spec, "final_ln": P(None)}
+
+    homogeneous = cfg.scan_layers and len(set(pattern)) == 1 \
+        and pattern[0] in ("dense", "moe")
+    if homogeneous:
+        def one(k):
+            return _block_init(k, cfg, pattern[0])
+        stacked = [one(keys[i + 1]) for i in range(cfg.num_layers)]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *[p for p, _ in stacked])
+        specs["blocks"] = jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), stacked[0][1],
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        blocks, bspecs = [], []
+        for i, kind in enumerate(pattern):
+            p, s = _block_init(keys[i + 1], cfg, kind)
+            blocks.append(p)
+            bspecs.append(s)
+        params["blocks"] = blocks
+        specs["blocks"] = bspecs
+
+    if _shared_attn_points(cfg):
+        p, s = _block_init(keys[-1], cfg, "shared_attn")
+        params["shared_attn"] = p
+        specs["shared_attn"] = s
+    if cfg.family == "vlm":
+        # stub frontend projection for patch embeddings
+        params["img_proj"] = jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.d_model), jnp.float32) \
+            * (cfg.d_model ** -0.5)
+        specs["img_proj"] = P(None, None)
+    return params, specs
+
+
+# -- block apply -------------------------------------------------------------------
+
+def _constrain_residual(t, mesh, dp_axes):
+    """REFUTED optimization (kept as a no-op for the record; EXPERIMENTS.md
+    §Perf H1): pinning TP branch outputs to (dp, None, None) was hypothesized
+    to force the model-axis all-reduce into bf16 at the block boundary.
+    Measured: no change on dense archs (granite 17.6s -> 17.6s) and a 65x
+    REGRESSION on MoE (qwen3 1.9s -> 122s) because the constraint fights the
+    expert-parallel shard_map's (dp, "model", None) sequence sharding."""
+    return t
+
+
+def _attn_block(params, x, cfg: ModelConfig, q_pos, cache, mesh, dp_axes):
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, new_cache = attn.mla_apply(params["attn"], h, cfg, q_pos, cache,
+                                      mesh=mesh, dp_axes=dp_axes)
+    else:
+        a, new_cache = attn.attn_apply(params["attn"], h, cfg, q_pos, cache,
+                                       mesh=mesh, dp_axes=dp_axes)
+    a = _constrain_residual(a, mesh, dp_axes)
+    x = x + a * cfg.residual_scale
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    aux = {}
+    if "moe" in params:
+        f, aux = moe_mod.moe_apply(params["moe"], h, cfg, mesh, dp_axes)
+    else:
+        f = mlp_apply(params["mlp"], h, cfg.mlp_gated)
+    f = _constrain_residual(f, mesh, dp_axes)
+    x = x + f * cfg.residual_scale
+    return x, new_cache, aux
+
+
+def _apply_block(params, x, *, cfg: ModelConfig, kind: str, q_pos, cache,
+                 mesh, dp_axes):
+    if kind in ("dense", "moe", "shared_attn"):
+        return _attn_block(params, x, cfg, q_pos, cache, mesh, dp_axes)
+    if kind == "mamba":
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        y, new_cache = ssm.mamba2_apply(params["mamba"], h, cfg, cache)
+        return x + _constrain_residual(y, mesh, dp_axes), new_cache, {}
+    if kind == "mlstm":
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        y, new_cache = ssm.mlstm_apply(params["cell"], h, cfg, cache)
+        return x + _constrain_residual(y, mesh, dp_axes), new_cache, {}
+    if kind == "slstm":
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        y, new_cache = ssm.slstm_apply(params["cell"], h, cfg, cache)
+        return x + _constrain_residual(y, mesh, dp_axes), new_cache, {}
+    raise ValueError(kind)
+
+
+def forward(params, cfg: ModelConfig, x, q_pos,
+            caches: Optional[List] = None,
+            mesh: Optional[Mesh] = None,
+            dp_axes: Sequence[str] = ("data",)):
+    """Run the block stack over embeddings x (B,S,d).
+
+    Returns (hidden (B,S,d), new_caches, aux dict)."""
+    pattern = layer_pattern(cfg)
+    shared_pts = set(_shared_attn_points(cfg))
+    aux_total: Dict[str, Any] = {}
+    homogeneous = cfg.scan_layers and len(set(pattern)) == 1 \
+        and pattern[0] in ("dense", "moe") and not shared_pts
+    decode = caches is not None
+
+    if homogeneous:
+        blocks = params["blocks"]
+        kind = pattern[0]
+
+        def body(carry, xs):
+            h = carry
+            bp, c = xs
+            h2, new_c, aux = _apply_block(bp, h, cfg=cfg, kind=kind,
+                                          q_pos=q_pos, cache=c, mesh=mesh,
+                                          dp_axes=dp_axes)
+            out_aux = jnp.stack([aux.get("moe_aux", jnp.zeros(())),
+                                 jnp.asarray(aux.get("moe_dropped", 0),
+                                             jnp.float32)]) \
+                if kind == "moe" else jnp.zeros((2,))
+            return h2, (new_c, out_aux)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        layer_caches = caches if decode else _none_stack(cfg.num_layers)
+        x, (new_caches, auxs) = jax.lax.scan(body, x, (blocks, layer_caches))
+        if pattern[0] == "moe":
+            aux_total["moe_aux"] = jnp.mean(auxs[:, 0])
+            aux_total["moe_dropped"] = jnp.sum(auxs[:, 1])
+        new_caches = new_caches if decode else None
+    else:
+        new_caches = [] if decode else None
+        # heterogeneous loop (xlstm / zamba2 / non-scanned).
+        # shared-attn caches: one PER APPLICATION POINT (weights are shared
+        # but each point sees different activations), appended after the
+        # per-layer caches in application order.
+        shared_caches_out = []
+        n_shared_seen = 0
+
+        def make_fn(kind_):
+            base = functools.partial(_apply_block, cfg=cfg, kind=kind_,
+                                     mesh=mesh, dp_axes=dp_axes)
+            fn_ = lambda p, h, q, c: base(p, h, q_pos=q, cache=c)
+            return jax.checkpoint(fn_) if cfg.remat else fn_
+
+        for i, kind in enumerate(pattern):
+            if i in shared_pts:
+                c = caches[cfg.num_layers + n_shared_seen] if decode else None
+                n_shared_seen += 1
+                x, sc, _ = make_fn("shared_attn")(params["shared_attn"], x,
+                                                  q_pos, c)
+                if decode:
+                    shared_caches_out.append(sc)
+            c = caches[i] if decode else None
+            x, new_c, aux = make_fn(kind)(params["blocks"][i], x, q_pos, c)
+            for k2, v in aux.items():
+                aux_total[k2] = aux_total.get(k2, 0.0) + v
+            if decode:
+                new_caches.append(new_c)
+        if decode:
+            new_caches.extend(shared_caches_out)
+
+    return x, new_caches, aux_total
+
+
+def _none_stack(n: int):
+    return None
+
+
+# -- caches ---------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer cache pytree matching forward()'s expectations."""
+    pattern = layer_pattern(cfg)
+    shared_pts = _shared_attn_points(cfg)
+    homogeneous = cfg.scan_layers and len(set(pattern)) == 1 \
+        and pattern[0] in ("dense", "moe") and not shared_pts
+
+    def one(kind: str):
+        if kind in ("dense", "moe", "shared_attn"):
+            if cfg.attn_type == "mla":
+                return attn.init_cache_mla(cfg, batch, max_len)
+            return attn.init_cache_gqa(cfg, batch, max_len)
+        if kind == "mamba":
+            return ssm.mamba2_init_cache(cfg, batch)
+        if kind == "mlstm":
+            return ssm.mlstm_init_cache(cfg, batch)
+        if kind == "slstm":
+            return ssm.slstm_init_cache(cfg, batch)
+        raise ValueError(kind)
+
+    if homogeneous:
+        caches = [one(pattern[0]) for _ in range(cfg.num_layers)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    caches = [one(k) for k in pattern]
+    for _pt in shared_pts:          # one cache per shared-attn application
+        caches.append(one("shared_attn"))
+    return caches
+
+
+# -- top level -----------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, tokens, img_embeds=None):
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.family == "vlm" and img_embeds is not None:
+        img = img_embeds.astype(COMPUTE_DTYPE) \
+            @ params["img_proj"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, q_pos=None,
+               caches=None, mesh=None, dp_axes=("data",), img_embeds=None,
+               last_only=False):
+    B, S = tokens.shape
+    x = embed_inputs(params, cfg, tokens, img_embeds)
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 (B, x.shape[1]))
+    x, new_caches, aux = forward(params, cfg, x, q_pos, caches, mesh, dp_axes)
+    if last_only:          # serving prefill: only the next-token logits
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = lm_logits(params["embed"], x, cfg.logit_cap, cfg.vocab)
+    return logits, new_caches, aux
+
+
+def train_loss(params, cfg: ModelConfig, batch, mesh=None, dp_axes=("data",),
+               aux_weight: float = 0.01):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    img = batch.get("img_embeds")
+    logits, _, aux = lm_forward(params, cfg, tokens, mesh=mesh,
+                                dp_axes=dp_axes, img_embeds=img)
+    if cfg.family == "vlm" and img is not None:
+        logits = logits[:, img.shape[1]:]           # loss on text positions
+    loss = softmax_xent(logits, labels, batch.get("loss_mask"))
+    if "moe_aux" in aux:
+        loss = loss + aux_weight * aux["moe_aux"]
+    metrics = dict(aux, loss=loss)
+    return loss, metrics

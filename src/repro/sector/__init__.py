@@ -1,0 +1,25 @@
+"""Sector: the storage cloud (paper §2).
+
+A file-based distributed storage system: a metadata master, slave nodes that
+store whole-file *slices* on their native filesystem, an independent security
+server, and a periodic topology-aware replication daemon.
+
+This is an in-process, filesystem-backed implementation: every slave owns a
+real directory; the master's metadata index is recoverable by scanning those
+directories (the paper's central design argument for whole-file slices).
+It backs the training framework's dataset pipeline and checkpoint store.
+"""
+
+from repro.sector.topology import NodeAddress, Topology, distance
+from repro.sector.security import SecurityServer, AccessDenied
+from repro.sector.slave import SlaveNode
+from repro.sector.master import Master, FileMeta, ReplicationDaemon
+from repro.sector.client import SectorClient
+from repro.sector.transport import LinkSpec, TransferSimulator
+
+__all__ = [
+    "NodeAddress", "Topology", "distance",
+    "SecurityServer", "AccessDenied",
+    "SlaveNode", "Master", "FileMeta", "ReplicationDaemon",
+    "SectorClient", "LinkSpec", "TransferSimulator",
+]

@@ -1,0 +1,56 @@
+"""Sector client (paper §2.3-2.4).
+
+A client logs on via the security server (through the master), then performs
+uploads/downloads; every transfer is master-coordinated and served by a single
+slave chosen for topology closeness and low load. Whole-file slices mean a
+client touches exactly one slave per file (the paper's contrast with
+block-based stores).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.sector.master import FileMeta, Master
+from repro.sector.topology import NodeAddress
+
+
+class SectorClient:
+    def __init__(self, master: Master, user: str, password: str,
+                 client_ip: str = "10.0.0.1",
+                 client_addr: Optional[NodeAddress] = None):
+        self.master = master
+        self.client_addr = client_addr
+        self._session = master.security.login(user, password, client_ip)
+
+    @property
+    def session_id(self) -> int:
+        return self._session.session_id
+
+    # -- file API ------------------------------------------------------------
+    def upload(self, path: str, data: bytes) -> FileMeta:
+        return self.master.upload(self.session_id, path, data, self.client_addr)
+
+    def download(self, path: str) -> bytes:
+        return self.master.download(self.session_id, path, self.client_addr)
+
+    def delete(self, path: str) -> None:
+        self.master.delete(self.session_id, path)
+
+    def stat(self, path: str) -> Optional[FileMeta]:
+        return self.master.lookup(path)
+
+    def ls(self, prefix: str = "/") -> List[FileMeta]:
+        return self.master.list_dir(prefix)
+
+    def upload_dataset(self, prefix: str, slices: List[bytes]) -> List[FileMeta]:
+        """Upload a dataset as numbered Sector slices (paper §2.1: 'datasets
+        ... are divided into 1 or more separate files, which are called Sector
+        Slices')."""
+        out = []
+        for i, data in enumerate(slices):
+            out.append(self.upload(f"{prefix}.{i:05d}", data))
+        return out
+
+    def close(self) -> None:
+        self.master.security.logout(self.session_id)

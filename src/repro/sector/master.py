@@ -1,0 +1,289 @@
+"""Sector master server (paper §2.1-2.2).
+
+The master maintains the metadata index (file -> size/checksum/locations),
+tracks slave liveness/load/space, verifies slaves against the security
+server's IP allow-list, coordinates every client-slave transfer, and runs the
+*periodic* replication check: if a file has fewer than ``replication_factor``
+live copies, a new copy is created on a topology-spread slave. Replication is
+lazy/periodic — the paper's contrast with GFS/HDFS at-write replication, and
+the reason Table 1 compares Hadoop at replication factors 1 and 3.
+
+``block_mode`` emulates a Hadoop-style block-based store (files chunked into
+fixed blocks, each block replicated independently) so the benchmarks can
+compare against the paper's baseline design point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.sector.security import AccessDenied, SecurityServer
+from repro.sector.slave import SlaveNode
+from repro.sector.topology import NodeAddress, distance, spread_choice
+
+
+@dataclasses.dataclass
+class FileMeta:
+    path: str
+    size: int
+    md5: str
+    #: slave ids currently holding a (believed-live) copy
+    locations: Set[int]
+
+
+class Master:
+    """Metadata + coordination. One per deployment (the paper supports
+    multiple masters sharing a security server; we model one)."""
+
+    def __init__(
+        self,
+        security: SecurityServer,
+        replication_factor: int = 3,
+        block_mode: bool = False,
+        block_size: int = 64 << 20,
+    ) -> None:
+        self.security = security
+        self.replication_factor = replication_factor
+        self.block_mode = block_mode
+        self.block_size = block_size
+        self.slaves: Dict[int, SlaveNode] = {}
+        self.index: Dict[str, FileMeta] = {}
+        self.stats = {"replications": 0, "lost_files": 0, "transfers": 0}
+
+    # -- slave membership ---------------------------------------------------
+    def register_slave(self, slave: SlaveNode) -> None:
+        """Admit a slave iff the security server allows its IP (paper §2.3)."""
+        if not self.security.verify_slave(slave.ip):
+            raise AccessDenied(f"slave ip {slave.ip} not on the allow-list")
+        self.slaves[slave.slave_id] = slave
+        # absorb anything already on its disk (scan-based metadata recovery)
+        for path, info in slave.scan().items():
+            meta = self.index.get(path)
+            if meta is None:
+                self.index[path] = FileMeta(path, info.size, info.md5, {slave.slave_id})
+            else:
+                meta.locations.add(slave.slave_id)
+
+    def live_slaves(self) -> List[SlaveNode]:
+        return [s for s in self.slaves.values() if s.alive]
+
+    def mark_slave_down(self, slave_id: int) -> None:
+        """Heartbeat loss: drop the slave from every file's location set."""
+        for meta in self.index.values():
+            meta.locations.discard(slave_id)
+
+    def heartbeat_sweep(self) -> None:
+        for sid, slave in self.slaves.items():
+            if not slave.alive:
+                self.mark_slave_down(sid)
+
+    # -- metadata recovery ----------------------------------------------------
+    def recover_from_scan(self) -> None:
+        """Rebuild the entire index from slave directory scans (paper §2.2:
+        'Sector can recover all the metadata it requires by simply scanning
+        the data directories on each slave')."""
+        self.index.clear()
+        for sid, slave in self.slaves.items():
+            if not slave.alive:
+                continue
+            for path, info in slave.scan().items():
+                meta = self.index.get(path)
+                if meta is None:
+                    self.index[path] = FileMeta(path, info.size, info.md5, {sid})
+                else:
+                    if meta.md5 != info.md5:
+                        # stale/corrupt replica: keep majority copy, drop this one
+                        slave.delete_file(path)
+                        continue
+                    meta.locations.add(sid)
+
+    # -- placement policy -----------------------------------------------------
+    def _placement_candidates(self, size: int, exclude: Set[int]) -> List[SlaveNode]:
+        return [
+            s for s in self.live_slaves()
+            if s.slave_id not in exclude and s.available_bytes() >= size
+        ]
+
+    def choose_upload_slave(self, size: int, client_addr: Optional[NodeAddress] = None
+                            ) -> SlaveNode:
+        """Pick the initial slave for an upload: close to the client, not busy,
+        with space (paper: 'choose a slave ... close to the client and not
+        busy with other services')."""
+        cands = self._placement_candidates(size, exclude=set())
+        if not cands:
+            raise IOError("no slave with sufficient space")
+
+        def key(s: SlaveNode) -> Tuple:
+            d = distance(client_addr, s.address) if client_addr else 0
+            return (d, s.active_services, -s.available_bytes(), s.slave_id)
+
+        return min(cands, key=key)
+
+    def choose_download_slave(self, path: str, client_addr: Optional[NodeAddress] = None
+                              ) -> SlaveNode:
+        meta = self._meta_or_raise(path)
+        cands = [self.slaves[sid] for sid in meta.locations
+                 if sid in self.slaves and self.slaves[sid].alive]
+        if not cands:
+            raise IOError(f"no live replica of {path}")
+
+        def key(s: SlaveNode) -> Tuple:
+            d = distance(client_addr, s.address) if client_addr else 0
+            return (d, s.active_services, s.slave_id)
+
+        return min(cands, key=key)
+
+    # -- file operations (always master-coordinated) ----------------------------
+    def _meta_or_raise(self, path: str) -> FileMeta:
+        meta = self.index.get(path)
+        if meta is None:
+            raise FileNotFoundError(path)
+        return meta
+
+    def upload(self, session_id: int, path: str, data: bytes,
+               client_addr: Optional[NodeAddress] = None) -> FileMeta:
+        self.security.check_access(session_id, path, "w")
+        if self.block_mode and len(data) > self.block_size:
+            return self._upload_blocks(path, data, client_addr)
+        slave = self.choose_upload_slave(len(data), client_addr)
+        slave.active_services += 1
+        try:
+            info = slave.write_file(path, data)
+        finally:
+            slave.active_services -= 1
+        meta = FileMeta(path, info.size, info.md5, {slave.slave_id})
+        self.index[path] = meta
+        self.stats["transfers"] += 1
+        return meta
+
+    def _upload_blocks(self, path: str, data: bytes,
+                       client_addr: Optional[NodeAddress]) -> FileMeta:
+        """Hadoop-style block-mode: chunk + replicate-at-write. The client must
+        then touch many slaves to read the file back — the contrast the paper
+        draws with whole-file slices."""
+        first_meta: Optional[FileMeta] = None
+        nblocks = (len(data) + self.block_size - 1) // self.block_size
+        for b in range(nblocks):
+            chunk = data[b * self.block_size:(b + 1) * self.block_size]
+            bpath = f"{path}.blk{b:05d}"
+            meta = None
+            # replicate at write time (HDFS behaviour)
+            exclude: Set[int] = set()
+            for _copy in range(self.replication_factor):
+                cands = self._placement_candidates(len(chunk), exclude)
+                if not cands:
+                    break
+                existing = [self.slaves[s].address for s in exclude]
+                addr = spread_choice([c.address for c in cands], existing)
+                slave = next(c for c in cands if c.address == addr)
+                info = slave.write_file(bpath, chunk)
+                exclude.add(slave.slave_id)
+                if meta is None:
+                    meta = FileMeta(bpath, info.size, info.md5, set())
+                meta.locations.add(slave.slave_id)
+                self.stats["transfers"] += 1
+            assert meta is not None
+            self.index[bpath] = meta
+            if first_meta is None:
+                first_meta = meta
+        manifest = FileMeta(path, len(data), "", set())
+        self.index[path] = manifest
+        return manifest
+
+    def download(self, session_id: int, path: str,
+                 client_addr: Optional[NodeAddress] = None) -> bytes:
+        self.security.check_access(session_id, path, "r")
+        meta = self._meta_or_raise(path)
+        if self.block_mode and not meta.locations:  # block manifest
+            nblocks = (meta.size + self.block_size - 1) // self.block_size
+            parts = []
+            for b in range(nblocks):
+                parts.append(self._download_one(f"{path}.blk{b:05d}", client_addr))
+            return b"".join(parts)
+        return self._download_one(path, client_addr)
+
+    def _download_one(self, path: str, client_addr: Optional[NodeAddress]) -> bytes:
+        slave = self.choose_download_slave(path, client_addr)
+        slave.active_services += 1
+        try:
+            data = slave.read_file(path)
+        finally:
+            slave.active_services -= 1
+        self.stats["transfers"] += 1
+        return data
+
+    def delete(self, session_id: int, path: str) -> None:
+        self.security.check_access(session_id, path, "w")
+        meta = self._meta_or_raise(path)
+        for sid in list(meta.locations):
+            slave = self.slaves.get(sid)
+            if slave is not None and slave.alive:
+                slave.delete_file(path)
+        del self.index[path]
+
+    def lookup(self, path: str) -> Optional[FileMeta]:
+        return self.index.get(path)
+
+    def list_dir(self, prefix: str) -> List[FileMeta]:
+        return [m for p, m in sorted(self.index.items()) if p.startswith(prefix)]
+
+    def locations_of(self, path: str) -> List[NodeAddress]:
+        meta = self._meta_or_raise(path)
+        return [self.slaves[s].address for s in sorted(meta.locations)
+                if s in self.slaves and self.slaves[s].alive]
+
+
+class ReplicationDaemon:
+    """Periodic replication check (paper §2.2): for every under-replicated
+    file, create a new copy on a topology-spread slave. Run ``tick()`` from
+    the training loop / tests; ``run_until_stable()`` iterates to fixpoint.
+    """
+
+    def __init__(self, master: Master):
+        self.master = master
+
+    def under_replicated(self) -> List[FileMeta]:
+        m = self.master
+        return [
+            meta for meta in m.index.values()
+            if meta.locations and
+            len([s for s in meta.locations
+                 if s in m.slaves and m.slaves[s].alive]) < m.replication_factor
+        ]
+
+    def tick(self, max_copies: int = 1 << 30) -> int:
+        """One replication pass; returns the number of new copies created."""
+        m = self.master
+        m.heartbeat_sweep()
+        created = 0
+        for meta in self.under_replicated():
+            if created >= max_copies:
+                break
+            live = [s for s in meta.locations if s in m.slaves and m.slaves[s].alive]
+            if not live:
+                m.stats["lost_files"] += 1
+                continue
+            cands = m._placement_candidates(meta.size, exclude=set(live))
+            if not cands:
+                continue
+            existing = [m.slaves[s].address for s in live]
+            addr = spread_choice([c.address for c in cands], existing)
+            dst = next(c for c in cands if c.address == addr)
+            src = m.slaves[live[0]]
+            data = src.read_file(meta.path)
+            dst.write_file(meta.path, data)
+            meta.locations.add(dst.slave_id)
+            created += 1
+            m.stats["replications"] += 1
+        return created
+
+    def run_until_stable(self, max_rounds: int = 64) -> int:
+        total = 0
+        for _ in range(max_rounds):
+            made = self.tick()
+            total += made
+            if made == 0:
+                break
+        return total

@@ -1,0 +1,169 @@
+"""Batched serving engine: slot-based continuous batching over the registry
+models' prefill/decode surface.
+
+The engine mirrors the Sphere client's role (paper §3.4): it orchestrates,
+the compiled XLA step is the SPE. Requests are segments; a fixed number of
+batch *slots* bounds the working set exactly like the scheduler's segment
+capacity clamp; finished slots are refilled from the queue each step
+(continuous batching). A request whose UDF (generation) errors is reported,
+not retried forever — the paper's data-error contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                 # (S,) int32 decoder/prompt tokens
+    max_new_tokens: int = 16
+    #: enc-dec models: (enc_seq, d_model) frame/patch embeddings (stub
+    #: frontend output) to be encoded once at admission
+    frames: Optional[np.ndarray] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, batch_slots: int = 4,
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros((batch_slots,), np.int32)
+        self.caches = model.init_caches(batch_slots, max_len)
+        self._batch_axes = self._find_batch_axes()
+        self.enc_dec = model.cfg.family == "audio"
+        if self.enc_dec:
+            # per-slot encoder output (cross-attention memory)
+            self.enc_out = jnp.zeros(
+                (batch_slots, model.cfg.enc_seq, model.cfg.d_model),
+                jnp.bfloat16)
+        self._decode = jax.jit(
+            lambda p, c, b: model.decode_step(p, c, b))
+
+    def _find_batch_axes(self):
+        """Per-cache-leaf batch axis, found structurally: the axis whose size
+        changes between init_caches(slots) and init_caches(slots+1). Size
+        matching is ambiguous (num_layers can equal batch_slots)."""
+        a = jax.eval_shape(lambda: self.model.init_caches(self.slots,
+                                                          self.max_len))
+        b = jax.eval_shape(lambda: self.model.init_caches(self.slots + 1,
+                                                          self.max_len))
+        axes = []
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            diff = [i for i, (x, y) in enumerate(zip(la.shape, lb.shape))
+                    if x != y]
+            axes.append(diff[0] if diff else None)
+        return axes
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Feed the prompt (all but its final token) through the decode path
+        for the slot. The final prompt token is fed by the first ``step()``
+        call, whose logits produce the first generated token — feeding the
+        whole prompt here would duplicate the last token. Other slots receive
+        a benign write at their next position, which the subsequent real
+        decode overwrites."""
+        if self.enc_dec:
+            from repro.models import encdec
+            frames = jnp.asarray(req.frames, jnp.bfloat16)[None]
+            eo = encdec.encode(self.params, self.model.cfg, frames)[0]
+            self.enc_out = self.enc_out.at[slot].set(eo)
+        for t, tok in enumerate(req.prompt[:-1]):
+            batch = {
+                "tokens": jnp.zeros((self.slots, 1), jnp.int32)
+                          .at[slot, 0].set(int(tok)),
+                "pos": jnp.asarray(self.pos[:, None]).astype(jnp.int32)
+                       .at[slot, 0].set(t),
+            }
+            if self.enc_dec:
+                batch["enc_out"] = self.enc_out
+            _, self.caches = self._decode(self.params, self.caches, batch)
+        self.pos[slot] = len(req.prompt) - 1
+
+    def step(self) -> List[Request]:
+        """One engine iteration: refill slots, decode one token for every
+        active slot, emit finished requests."""
+        # refill
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.pos[s] = 0
+                self._reset_slot_cache(s)
+                self._prefill_into_slot(s, req)
+                self.active[s] = req
+
+        if not any(self.active):
+            return []
+
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                last = req.out_tokens[-1] if req.out_tokens else \
+                    int(req.prompt[-1])
+                tokens[s, 0] = last
+        batch = {"tokens": jnp.asarray(tokens),
+                 "pos": jnp.asarray(self.pos[:, None])}
+        if self.enc_dec:
+            batch["enc_out"] = self.enc_out
+        logits, self.caches = self._decode(self.params, self.caches, batch)
+        logits = np.asarray(logits[:, 0], np.float32)
+
+        finished: List[Request] = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(
+                    sub, jnp.asarray(logits[s]) / self.temperature))
+            else:
+                nxt = int(np.argmax(logits[s]))
+            req.out_tokens.append(nxt)
+            self.pos[s] += 1
+            if len(req.out_tokens) >= req.max_new_tokens or \
+                    self.pos[s] >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.active[s] = None
+        return finished
+
+    def _reset_slot_cache(self, slot: int) -> None:
+        leaves, treedef = jax.tree.flatten(self.caches)
+        out = []
+        for leaf, ax in zip(leaves, self._batch_axes):
+            if ax is None:
+                out.append(leaf)
+                continue
+            idx = [slice(None)] * leaf.ndim
+            idx[ax] = slot
+            # the only int32 cache leaves are position maps; empty = -1
+            fill = -1 if leaf.dtype == jnp.int32 else 0
+            out.append(leaf.at[tuple(idx)].set(fill))
+        self.caches = jax.tree.unflatten(treedef, out)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.queue and not any(self.active):
+                break
+        return done

@@ -1,0 +1,21 @@
+"""Sphere runtime (paper §3.3-3.5): SPEs, the client-driven segment
+scheduler (locality rules, straggler duplication, fault tolerance), and the
+client orchestration engine.
+
+This layer schedules *host-level* work: which host reads/processes which
+Sector segment. Inside a compiled XLA step scheduling is static, so the
+paper's dynamic behaviours live where dynamism still exists on a TPU cluster
+— the input pipeline, per-host data loading, and checkpoint/restart — and in
+the benchmark simulations that reproduce the paper's tables.
+"""
+
+from repro.sphere.scheduler import (
+    SegmentScheduler, SPEState, SegmentState, ScheduleEvent,
+)
+from repro.sphere.spe import SPE
+from repro.sphere.engine import SphereProcess
+
+__all__ = [
+    "SegmentScheduler", "SPEState", "SegmentState", "ScheduleEvent",
+    "SPE", "SphereProcess",
+]

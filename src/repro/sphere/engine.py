@@ -1,0 +1,138 @@
+"""Sphere client orchestration (paper §3.4): ``SphereProcess.run``.
+
+"The client is responsible for orchestrating the complete running of each
+Sphere process" — it segments the input stream (§3.5.1), assigns segments to
+SPEs (scheduler rules), tracks per-segment status, retries failed segments on
+other SPEs, reports UDF/data errors back to the application, and collects
+results (or routes them to bucket files for the next stage).
+
+This host-level engine actually executes UDFs over data stored in Sector —
+it is what `examples/inverted_index.py` and the Terasort data plane use. The
+in-XLA analogue of the same pattern is :func:`repro.core.udf.sphere_map`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.stream import SegmentInfo, SphereStream
+from repro.sector.master import Master
+from repro.sector.topology import NodeAddress
+from repro.sphere.spe import SPE
+
+
+@dataclasses.dataclass
+class SphereResult:
+    #: per-segment UDF outputs, indexed by segment index
+    outputs: Dict[int, Any]
+    #: segments that permanently failed with data/UDF errors (paper: reported
+    #: to the application, not silently retried forever)
+    errors: Dict[int, str]
+    #: total SPE-level retries that fault tolerance absorbed
+    retries: int
+
+    def concat(self) -> np.ndarray:
+        parts = [self.outputs[i] for i in sorted(self.outputs)]
+        return np.concatenate(parts, axis=0)
+
+
+class SphereProcess:
+    """myproc.run(stream, udf) — the paper's client API (§3.1 pseudo-code)."""
+
+    def __init__(self, master: Master, session_id: int,
+                 spes: Sequence[SPE], max_retries: int = 2):
+        self.master = master
+        self.session_id = session_id
+        self.spes = list(spes)
+        self.max_retries = max_retries
+
+    def segment_stream(self, file_paths: Sequence[str], record_bytes: int,
+                       s_min: int = 1, s_max: int = 1 << 30,
+                       ) -> List[SegmentInfo]:
+        files: List[Tuple[str, int]] = []
+        total = 0
+        for p in file_paths:
+            meta = self.master.lookup(p)
+            if meta is None:
+                raise FileNotFoundError(p)
+            nrec = meta.size // record_bytes
+            files.append((p, nrec))
+            total += nrec
+        return SphereStream.plan_segments(
+            total, record_bytes, files, s_min=s_min, s_max=s_max,
+            num_spes=len(self.spes))
+
+    def run(
+        self,
+        file_paths: Sequence[str],
+        udf: Callable[[np.ndarray], Any],
+        record_bytes: int,
+        bucket_fn: Optional[Callable[[Any], Dict[int, Any]]] = None,
+        num_buckets: int = 0,
+    ) -> SphereResult:
+        """Execute ``udf`` over every segment; optionally route outputs to
+        buckets (``bucket_fn`` maps a UDF output to {bucket_id: records}),
+        which become the input stream of the next stage."""
+        segments = self.segment_stream(file_paths, record_bytes)
+        outputs: Dict[int, Any] = {}
+        errors: Dict[int, str] = {}
+        buckets: Dict[int, List[Any]] = {b: [] for b in range(num_buckets)}
+        retries = 0
+
+        # locality-greedy assignment, then round-robin execution with retry
+        pending = list(range(len(segments)))
+        rr = 0
+        attempt: Dict[int, int] = {i: 0 for i in pending}
+        live = [s for s in self.spes]
+        while pending:
+            seg_i = pending.pop(0)
+            seg = segments[seg_i]
+            if not live:
+                errors[seg_i] = "no live SPEs"
+                continue
+            # rule 1: prefer an SPE co-located with a replica
+            locs = [self.master.slaves[s].address
+                    for s in (self.master.lookup(seg.file_path).locations)
+                    if s in self.master.slaves and self.master.slaves[s].alive]
+            def loc_key(spe: SPE):
+                from repro.sector.topology import distance
+                d = min((distance(spe.address, a) for a in locs), default=3)
+                return (d, spe.segments_done, spe.spe_id)
+            spe = min(live, key=loc_key) if locs else live[rr % len(live)]
+            rr += 1
+            try:
+                out = spe.process(seg, udf, record_bytes)
+            except (IOError, OSError) as e:           # SPE/node failure
+                live = [s for s in live if s is not spe]
+                attempt[seg_i] += 1
+                retries += 1
+                if attempt[seg_i] > self.max_retries + len(self.spes):
+                    errors[seg_i] = f"gave up: {e}"
+                else:
+                    pending.append(seg_i)             # reassign (paper §3.5.2)
+                continue
+            except Exception as e:                    # data/UDF error
+                attempt[seg_i] += 1
+                if attempt[seg_i] >= self.max_retries:
+                    errors[seg_i] = repr(e)           # report to application
+                else:
+                    retries += 1
+                    pending.append(seg_i)
+                continue
+            outputs[seg_i] = out
+            if bucket_fn is not None:
+                # the paper: SPE dumps results locally first, then sends to
+                # bucket handlers; handler accepts per-segment data exactly once
+                for b, recs in bucket_fn(out).items():
+                    buckets[b].append(recs)
+
+        result = SphereResult(outputs=outputs, errors=errors, retries=retries)
+        if bucket_fn is not None:
+            result.outputs = {
+                b: (np.concatenate(v, axis=0) if v else np.zeros((0,)))
+                for b, v in buckets.items()
+            }
+        return result

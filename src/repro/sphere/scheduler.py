@@ -1,0 +1,254 @@
+"""Client-driven segment scheduler (paper §3.5).
+
+Implements the paper's scheduling rules verbatim:
+
+  1. "Each data segment is assigned to an SPE on the same node if there is
+     one available."  (data locality)
+  2. "Segments from the same file are processed at the same time unless
+     following this rule leaves SPEs idle."  (read concurrency: prefer to
+     spread *distinct* files across simultaneously-running SPEs)
+  3. "If there are still idle SPEs available ... assign them parts of data
+     segments to process in the same order as they occur in the input
+     stream."
+
+plus the fault-tolerance and straggler policies of §3.5.2:
+
+  - an SPE that misses its progress heartbeat past ``timeout`` is discarded
+    and its segment goes back to the pool (re-executed from scratch — Sphere
+    does no SPE checkpointing);
+  - near the end, idle SPEs are assigned *duplicates* of still-running
+    segments and the client takes whichever copy finishes first;
+  - a segment that fails ``max_data_errors`` times with a *data* error (bad
+    input / UDF bug) is reported to the client, not retried elsewhere.
+
+The implementation is a deterministic discrete-event simulation: the same
+logic drives host-level data-pipeline assignment (``static_assignment``) and
+the runnability tests/benchmarks (``run``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.stream import SegmentInfo
+from repro.sector.topology import NodeAddress, distance
+
+
+class SegStatus(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    DATA_ERROR = "data_error"
+
+
+@dataclasses.dataclass
+class SPEState:
+    spe_id: int
+    address: NodeAddress
+    speed: float = 1.0           # records / second
+    alive: bool = True
+    fail_at: Optional[float] = None   # injected crash time
+    busy_until: float = 0.0
+    current: Optional[int] = None     # segment index being processed
+    processed: int = 0
+
+
+@dataclasses.dataclass
+class SegmentState:
+    info: SegmentInfo
+    locations: List[NodeAddress]      # replicas (from the Sector master)
+    status: SegStatus = SegStatus.PENDING
+    running_on: Set[int] = dataclasses.field(default_factory=set)
+    completed_by: Optional[int] = None
+    attempts: int = 0
+    data_errors: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleEvent:
+    time: float
+    kind: str                 # assign / complete / timeout / duplicate / error
+    spe_id: int
+    segment: int
+
+
+class SegmentScheduler:
+    def __init__(
+        self,
+        segments: Sequence[SegmentInfo],
+        spes: Sequence[SPEState],
+        locations: Dict[str, List[NodeAddress]],
+        timeout: float = 60.0,
+        speculate: bool = True,
+        max_data_errors: int = 2,
+        remote_read_penalty: float = 2.0,
+    ):
+        self.segments = [
+            SegmentState(info=s, locations=list(locations.get(s.file_path, [])))
+            for s in segments
+        ]
+        self.spes = {s.spe_id: s for s in spes}
+        self.timeout = timeout
+        self.speculate = speculate
+        self.max_data_errors = max_data_errors
+        self.remote_read_penalty = remote_read_penalty
+        self.events: List[ScheduleEvent] = []
+
+    # -- the paper's assignment rules ------------------------------------
+    def _pick_segment(self, spe: SPEState, now: float) -> Optional[int]:
+        pending = [i for i, s in enumerate(self.segments)
+                   if s.status == SegStatus.PENDING]
+        if pending:
+            running_files = {self.segments[i].info.file_path
+                             for i, s in enumerate(self.segments)
+                             if s.status == SegStatus.RUNNING}
+
+            def rule_key(i: int) -> Tuple:
+                seg = self.segments[i]
+                # rule 1: locality — min topology distance to a replica
+                dloc = min((distance(spe.address, a) for a in seg.locations),
+                           default=3)
+                # rule 2: prefer files NOT already being read (spread reads
+                # over distinct files); but never leave the SPE idle (we are
+                # already committed to assigning something).
+                same_file_penalty = 1 if seg.info.file_path in running_files else 0
+                # rule 3: stream order
+                return (dloc, same_file_penalty, seg.info.index)
+
+            return min(pending, key=rule_key)
+
+        # tail: speculative duplicates of still-running segments (§3.5.2)
+        if self.speculate:
+            running = [i for i, s in enumerate(self.segments)
+                       if s.status == SegStatus.RUNNING
+                       and spe.spe_id not in s.running_on]
+            if running:
+                # duplicate the one that started earliest (most overdue)
+                return min(running, key=lambda i: self.segments[i].info.index)
+        return None
+
+    def _proc_time(self, spe: SPEState, seg: SegmentState) -> float:
+        base = seg.info.num_records / spe.speed
+        dloc = min((distance(spe.address, a) for a in seg.locations), default=3)
+        if dloc > 0:
+            base *= self.remote_read_penalty  # remote read (rule-1 rationale)
+        return base
+
+    # -- static assignment for the data pipeline --------------------------
+    def static_assignment(self) -> Dict[int, List[int]]:
+        """One pass of rules 1-3 assigning every segment to exactly one SPE
+        (round-robin over SPEs, locality-greedy). Used to map dataset segments
+        to hosts before a training run; no simulation."""
+        assignment: Dict[int, List[int]] = {sid: [] for sid in self.spes}
+        load = {sid: 0 for sid in self.spes}
+        for i, seg in enumerate(self.segments):
+            def key(sid: int) -> Tuple:
+                spe = self.spes[sid]
+                dloc = min((distance(spe.address, a) for a in seg.locations),
+                           default=3)
+                return (load[sid], dloc, sid)
+            best = min(self.spes, key=key)
+            assignment[best].append(i)
+            load[best] += seg.info.num_records
+        return assignment
+
+    # -- discrete-event simulation -----------------------------------------
+    def run(self, fail_segments: Optional[Set[int]] = None) -> Dict[str, float]:
+        """Simulate the full Sphere process; returns summary stats.
+
+        ``fail_segments``: segment indices whose *data* is bad — every attempt
+        raises a data error (paper: reported to client, never retried on
+        another SPE beyond max_data_errors).
+        """
+        fail_segments = fail_segments or set()
+        counter = itertools.count()
+        heap: List[Tuple[float, int, str, int, int]] = []  # (t, seq, kind, spe, seg)
+        now = 0.0
+        last_useful = 0.0   # time of the last segment-state transition;
+        #                     zombie duplicate completions don't extend it
+
+        def log(kind: str, spe_id: int, seg_i: int, t: float) -> None:
+            self.events.append(ScheduleEvent(t, kind, spe_id, seg_i))
+
+        def try_assign(spe: SPEState, t: float) -> None:
+            if not spe.alive or spe.current is not None:
+                return
+            seg_i = self._pick_segment(spe, t)
+            if seg_i is None:
+                return
+            seg = self.segments[seg_i]
+            dup = seg.status == SegStatus.RUNNING
+            seg.status = SegStatus.RUNNING
+            seg.running_on.add(spe.spe_id)
+            seg.attempts += 1
+            spe.current = seg_i
+            dt = self._proc_time(spe, seg)
+            spe.busy_until = t + dt
+            if spe.fail_at is not None and spe.fail_at < t + dt:
+                # SPE dies mid-segment: client sees heartbeat loss at
+                # fail time + timeout
+                heapq.heappush(heap, (spe.fail_at + self.timeout, next(counter),
+                                      "timeout", spe.spe_id, seg_i))
+            else:
+                heapq.heappush(heap, (t + dt, next(counter),
+                                      "complete", spe.spe_id, seg_i))
+            log("duplicate" if dup else "assign", spe.spe_id, seg_i, t)
+
+        for spe in self.spes.values():
+            try_assign(spe, now)
+
+        while heap:
+            now, _, kind, spe_id, seg_i = heapq.heappop(heap)
+            spe = self.spes[spe_id]
+            seg = self.segments[seg_i]
+            if kind == "complete":
+                if not spe.alive or spe.current != seg_i:
+                    continue  # stale event
+                spe.current = None
+                if seg.status == SegStatus.DONE:
+                    pass  # a speculative twin already finished
+                elif seg_i in fail_segments:
+                    seg.data_errors += 1
+                    seg.running_on.discard(spe_id)
+                    log("error", spe_id, seg_i, now)
+                    last_useful = now
+                    if seg.data_errors >= self.max_data_errors:
+                        seg.status = SegStatus.DATA_ERROR
+                    else:
+                        seg.status = SegStatus.PENDING
+                else:
+                    seg.status = SegStatus.DONE
+                    seg.completed_by = spe_id
+                    seg.running_on.discard(spe_id)
+                    spe.processed += seg.info.num_records
+                    log("complete", spe_id, seg_i, now)
+                    last_useful = now
+                try_assign(spe, now)
+                # completion may free speculation slots for other idle SPEs
+                for other in self.spes.values():
+                    try_assign(other, now)
+            elif kind == "timeout":
+                if spe.fail_at is not None and spe.alive:
+                    spe.alive = False  # discard the SPE (paper §3.5.2)
+                    spe.current = None
+                    log("timeout", spe_id, seg_i, now)
+                    if seg.status == SegStatus.RUNNING:
+                        seg.running_on.discard(spe_id)
+                        if not seg.running_on:
+                            seg.status = SegStatus.PENDING
+                    for other in self.spes.values():
+                        try_assign(other, now)
+
+        done = sum(1 for s in self.segments if s.status == SegStatus.DONE)
+        err = sum(1 for s in self.segments if s.status == SegStatus.DATA_ERROR)
+        return {
+            "makespan": last_useful,
+            "done": done,
+            "data_errors": err,
+            "unfinished": len(self.segments) - done - err,
+            "attempts": sum(s.attempts for s in self.segments),
+        }

@@ -1,0 +1,57 @@
+"""Sphere Processing Engine (paper §3.3).
+
+The SPE loop, verbatim from the paper:
+
+  1. accept a new data segment (file name, offset, rows, params);
+  2. read the segment (+ its .idx index) from local disk or another slave;
+  3. run the processing function on records / groups / the whole segment,
+     writing results to the proper destinations, with periodic progress acks;
+  4. ack segment completion; release when the client closes.
+
+Here an SPE executes a Python/JAX UDF over bytes fetched through the Sector
+master (locality is the scheduler's job). ``result`` is returned to the
+client (engine) or routed to bucket files via the engine's bucket writer —
+including the paper's local-dump-first fault-tolerance contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.stream import SegmentInfo
+from repro.sector.master import Master
+from repro.sector.topology import NodeAddress
+
+
+@dataclasses.dataclass
+class SPE:
+    spe_id: int
+    address: NodeAddress
+    master: Master
+    session_id: int
+    #: injected failure: raise IOError after this many segments (None = never)
+    fail_after: Optional[int] = None
+    segments_done: int = 0
+
+    def read_segment(self, seg: SegmentInfo, record_bytes: int) -> np.ndarray:
+        """Step 2: fetch the segment's bytes (whole-file slice + offset)."""
+        data = self.master.download(self.session_id, seg.file_path,
+                                    client_addr=self.address)
+        start = seg.offset * record_bytes
+        stop = start + seg.num_records * record_bytes
+        chunk = data[start:stop]
+        return np.frombuffer(chunk, dtype=np.uint8).reshape(
+            seg.num_records, record_bytes)
+
+    def process(self, seg: SegmentInfo, udf: Callable[[np.ndarray], Any],
+                record_bytes: int) -> Any:
+        """Steps 1-4 for one segment."""
+        if self.fail_after is not None and self.segments_done >= self.fail_after:
+            raise IOError(f"SPE {self.spe_id} crashed")
+        records = self.read_segment(seg, record_bytes)
+        result = udf(records)
+        self.segments_done += 1
+        return result

@@ -1,0 +1,3 @@
+"""Training substrate: optimizer (AdamW + ZeRO-1 sharding), trainer
+(grad-accum, clipping, schedules), Sector-backed checkpointing with periodic
+replication and scan-recovery restore, and elastic re-meshing."""

@@ -1,0 +1,47 @@
+"""Elastic scaling: re-shard training state onto a different mesh.
+
+Node loss on a real cluster shrinks the healthy device set; because Sector
+checkpoints are device-layout-agnostic byte slices, restart is:
+
+  1. replication daemon has kept >= R copies of every checkpoint slice;
+  2. surviving hosts form a new (smaller or larger) mesh;
+  3. ``remesh`` device_puts the restored state with the same PartitionSpecs
+     over the new mesh (GSPMD handles any axis-size change that still
+     divides the tensors — specs are symbolic, not size-bound).
+
+The same path implements scale-UP when capacity returns.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def shardings_for(mesh: Mesh, specs):
+    def fix(s: P) -> P:
+        # drop axes the new mesh no longer has (e.g. "pod" after pod loss)
+        entries = []
+        for e in s:
+            if e is None:
+                entries.append(None)
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a in mesh.shape)
+                entries.append(kept if kept else None)
+            else:
+                entries.append(e if e in mesh.shape else None)
+        return P(*entries)
+
+    return jax.tree.map(lambda s: NamedSharding(mesh, fix(s)), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def remesh(tree, mesh: Mesh, specs):
+    """device_put every leaf onto ``mesh`` with (axis-filtered) ``specs``."""
+    shard = shardings_for(mesh, specs)
+    flat_t, tdef = jax.tree.flatten(tree)
+    flat_s = jax.tree.leaves(shard, is_leaf=lambda x: hasattr(x, "spec"))
+    return jax.tree.unflatten(
+        tdef, [jax.device_put(t, s) for t, s in zip(flat_t, flat_s)])

@@ -1,0 +1,135 @@
+"""AdamW in pure JAX with ZeRO-1-style optimizer-state sharding.
+
+ZeRO-1 via GSPMD: the first- and second-moment pytrees reuse the parameter
+PartitionSpecs, then the largest still-replicated dimension of each state
+leaf is additionally sharded over the ``data`` axis. XLA then materializes
+the reduce-scatter / all-gather pattern of ZeRO-1 automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def init_opt_state(params, master: bool = False) -> Dict[str, Any]:
+    """AdamW moments (+ optional fp32 master weights for bf16-param
+    training). The master copy is ZeRO-1 sharded like the moments."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    out = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master:
+        out["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return out
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state):
+    """One AdamW step with global-norm clipping. Returns (params, opt_state,
+    metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    has_master = "master" in opt_state
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        new_master = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                  + cfg.weight_decay * base)
+        return new_master.astype(p.dtype), m2, v2, new_master
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_w = jax.tree.leaves(opt_state["master"]) if has_master \
+        else [None] * len(flat_p)
+    out = [upd(p, g, m, v, w) for p, g, m, v, w
+           in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if has_master:
+        new_state["master"] = jax.tree.unflatten(
+            tdef, [o[3] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics
+
+
+def zero1_specs(param_specs, params_shape, data_axes: Tuple[str, ...] = ("data",),
+                mesh_shape: Optional[Dict[str, int]] = None):
+    """ZeRO-1: derive optimizer-moment PartitionSpecs from parameter specs by
+    sharding the largest replicated dim over the data axes (when divisible).
+
+    param_specs / params_shape: matching pytrees of PartitionSpec and
+    ShapeDtypeStruct (or arrays).
+    """
+    dsize = 1
+    if mesh_shape:
+        for a in data_axes:
+            dsize *= mesh_shape.get(a, 1)
+
+    def one(spec: P, arr) -> P:
+        shape = arr.shape
+        if dsize <= 1 or not shape:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        # pick the largest dim currently replicated and divisible
+        cands = [(shape[i], i) for i, e in enumerate(entries)
+                 if e is None and shape[i] % dsize == 0]
+        if not cands:
+            return spec
+        _, idx = max(cands)
+        entries[idx] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*entries)
+
+    return jax.tree.map(one, param_specs, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))

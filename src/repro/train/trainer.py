@@ -1,0 +1,129 @@
+"""Trainer: builds the jitted, sharded train step (grad accumulation, AdamW,
+metrics) for any registry model on any mesh.
+
+Distribution recipe (DESIGN.md §5): batch over ("pod","data"); weights over
+"model" per the registry param specs; optimizer moments additionally ZeRO-1
+sharded over "data". Buffers are donated so params/opt update in place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.registry import Model
+from repro.train.optimizer import (AdamWConfig, adamw_update, init_opt_state,
+                                   zero1_specs)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: int = 0
+
+
+def make_state_shardings(model: Model, mesh: Mesh, param_specs,
+                         zero1: bool = True, master: bool = False):
+    """NamedShardings for params and optimizer state."""
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    params_shape = jax.eval_shape(lambda k: model.init(k)[0],
+                                  jax.random.PRNGKey(0))
+    if zero1 and "data" in mesh.shape:
+        mspec = zero1_specs(param_specs, params_shape,
+                            data_axes=("data",),
+                            mesh_shape=dict(mesh.shape))
+    else:
+        mspec = param_specs
+    m_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), mspec,
+                           is_leaf=lambda x: isinstance(x, P))
+    opt_shard = {"m": m_shard, "v": m_shard,
+                 "step": NamedSharding(mesh, P())}
+    if master:
+        opt_shard["master"] = m_shard   # fp32 master, ZeRO-1 sharded
+    return p_shard, opt_shard
+
+
+def build_train_step(model: Model, opt_cfg: AdamWConfig, mesh: Optional[Mesh],
+                     dp_axes: Sequence[str] = ("data",),
+                     accum_steps: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With accum_steps > 1 the batch's leading axis must be divisible; micro
+    batches run under lax.scan with gradient accumulation (fp32).
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch, mesh=mesh,
+                                         dp_axes=tuple(dp_axes))
+        return loss, metrics
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), b)
+
+            micro_batches = micro(batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc, _ = carry
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum_steps,
+                    acc, grads)
+                return (acc, loss), None
+
+            (grads, loss), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros(())), micro_batches)
+            metrics = {}
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, opt_cfg: AdamWConfig, mesh: Mesh,
+                   param_specs, batch_specs: Dict[str, P],
+                   dp_axes: Sequence[str] = ("data",),
+                   accum_steps: int = 1, zero1: bool = True,
+                   donate: bool = True):
+    p_shard, opt_shard = make_state_shardings(model, mesh, param_specs, zero1)
+    b_shard = {k: NamedSharding(mesh, s) for k, s in batch_specs.items()}
+    step = build_train_step(model, opt_cfg, mesh, dp_axes, accum_steps)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, b_shard),
+        out_shardings=(p_shard, opt_shard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, (p_shard, opt_shard, b_shard)
+
+
+def init_train_state(model: Model, key, mesh: Optional[Mesh] = None,
+                     param_specs=None, zero1: bool = True):
+    """Materialize params + optimizer state (sharded when mesh given)."""
+    if mesh is None:
+        params, _ = model.init(key)
+        return params, init_opt_state(params)
+    p_shard, opt_shard = make_state_shardings(model, mesh, param_specs, zero1)
+    params = jax.jit(lambda k: model.init(k)[0], out_shardings=p_shard)(key)
+    opt = jax.jit(init_opt_state, out_shardings=opt_shard)(params)
+    return params, opt

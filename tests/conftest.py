@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make `repro` importable regardless of how pytest is invoked. Note: we do
+# NOT set --xla_force_host_platform_device_count here — smoke tests must see
+# one device; SPMD tests spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

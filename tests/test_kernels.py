@@ -1,0 +1,81 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 4096, 10_000])
+@pytest.mark.parametrize("buckets", [1, 4, 17, 128, 513])
+def test_bucket_histogram_shapes(n, buckets):
+    ids = RNG.integers(0, buckets, size=n).astype(np.int32)
+    got = ops.bucket_histogram(jnp.asarray(ids), buckets)
+    want = ref.bucket_histogram_ref(jnp.asarray(ids), buckets)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(got.sum()) == n
+
+
+def test_bucket_histogram_ignores_out_of_range():
+    ids = np.array([-1, 0, 1, 5, 99], np.int32)
+    got = ops.bucket_histogram(jnp.asarray(ids), 4)
+    np.testing.assert_array_equal(np.asarray(got), [1, 1, 0, 0])
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 2), (3, 9), (2, 128), (1, 1000),
+                                       (4, 257)])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_sort_segments_sweep(rows, cols, dtype):
+    if dtype == np.int32:
+        keys = RNG.integers(0, 1 << 30, size=(rows, cols)).astype(dtype)
+    else:
+        keys = RNG.standard_normal((rows, cols)).astype(dtype)
+    got = ops.sort_segments(jnp.asarray(keys))
+    want = ref.sort_segments_ref(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 16), (3, 100), (2, 512)])
+def test_sort_kv_segments_sweep(rows, cols):
+    keys = RNG.integers(0, 1 << 20, size=(rows, cols)).astype(np.int32)
+    vals = np.arange(rows * cols, dtype=np.int32).reshape(rows, cols)
+    gk, gv = ops.sort_kv_segments(jnp.asarray(keys), jnp.asarray(vals))
+    rk, rv = ref.sort_kv_segments_ref(jnp.asarray(keys), jnp.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(rk))
+    # (key, value) multiset preserved per row (bitonic is not stable)
+    for r in range(rows):
+        got_pairs = sorted(zip(np.asarray(gk)[r], np.asarray(gv)[r]))
+        want_pairs = sorted(zip(keys[r], vals[r]))
+        assert got_pairs == want_pairs
+
+
+def test_sort_duplicate_keys():
+    keys = np.array([[5, 5, 5, 1, 1, 9, 0, 5]], np.int32)
+    got = ops.sort_segments(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(got)[0],
+                                  np.sort(keys[0]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**30 - 1), min_size=1, max_size=300))
+def test_property_bitonic_sorts_and_preserves(xs):
+    keys = np.asarray(xs, np.int32)[None, :]
+    got = np.asarray(ops.sort_segments(jnp.asarray(keys)))[0]
+    assert list(got) == sorted(xs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=500),
+       st.integers(1, 64))
+def test_property_histogram_counts(ids, buckets):
+    arr = np.asarray(ids, np.int32)
+    got = np.asarray(ops.bucket_histogram(jnp.asarray(arr), buckets))
+    import collections
+    want = collections.Counter(i for i in ids if i < buckets)
+    for b in range(buckets):
+        assert got[b] == want.get(b, 0)

@@ -1,0 +1,128 @@
+"""Sphere segment scheduler: the paper's rules 1-3, fault tolerance,
+straggler speculation (§3.5), plus hypothesis properties."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.stream import SegmentInfo, SphereStream
+from repro.sector.topology import NodeAddress
+from repro.sphere.scheduler import SegmentScheduler, SegStatus, SPEState
+
+
+def make_segments(n, files=4, recs=1000):
+    return [SegmentInfo(i, f"/d/f{i % files:02d}", 0, recs) for i in range(n)]
+
+
+def locations(files=4):
+    return {f"/d/f{i:02d}": [NodeAddress(0, i % 2, i)] for i in range(files)}
+
+
+def test_all_segments_complete():
+    spes = [SPEState(i, NodeAddress(0, i % 2, i % 4), speed=1e3)
+            for i in range(4)]
+    s = SegmentScheduler(make_segments(16), spes, locations())
+    stats = s.run()
+    assert stats["done"] == 16 and stats["unfinished"] == 0
+
+
+def test_locality_rule_prefers_colocated_spe():
+    # one SPE sits exactly on the data node; it should get the segment
+    spes = [SPEState(0, NodeAddress(0, 0, 0), speed=1e3),
+            SPEState(1, NodeAddress(1, 1, 9), speed=1e3)]
+    segs = [SegmentInfo(0, "/d/f00", 0, 100)]
+    s = SegmentScheduler(segs, spes, locations())
+    s.run()
+    assert s.segments[0].completed_by == 0
+
+
+def test_straggler_speculation_wins():
+    """A 100x-slow SPE must not gate the makespan: the tail segment is
+    duplicated on a fast idle SPE which finishes first (§3.5.2)."""
+    spes = [SPEState(0, NodeAddress(0, 0, 0), speed=1e3),
+            SPEState(1, NodeAddress(0, 0, 1), speed=10.0)]
+    segs = make_segments(4, files=1)
+    s = SegmentScheduler(segs, spes, locations(1), speculate=True)
+    stats = s.run()
+    assert stats["done"] == 4
+    # speculation happened and the slow SPE completed almost nothing
+    assert any(e.kind == "duplicate" for e in s.events)
+    assert stats["makespan"] < 4 * 1000 / 10.0  # far below slow-SPE-only time
+
+    s2 = SegmentScheduler(make_segments(4, files=1),
+                          [SPEState(0, NodeAddress(0, 0, 0), speed=1e3),
+                           SPEState(1, NodeAddress(0, 0, 1), speed=10.0)],
+                          locations(1), speculate=False)
+    st2 = s2.run()
+    assert stats["makespan"] <= st2["makespan"]
+
+
+def test_spe_crash_reassigns_segment():
+    spes = [SPEState(0, NodeAddress(0, 0, 0), speed=100.0, fail_at=0.5),
+            SPEState(1, NodeAddress(0, 0, 1), speed=100.0)]
+    s = SegmentScheduler(make_segments(6), spes, locations(), timeout=1.0)
+    stats = s.run()
+    assert stats["done"] == 6
+    assert any(e.kind == "timeout" for e in s.events)
+    assert all(seg.completed_by == 1 or seg.completed_by == 0
+               for seg in s.segments)
+
+
+def test_data_error_reported_not_retried_forever():
+    spes = [SPEState(i, NodeAddress(0, 0, i), speed=1e3) for i in range(2)]
+    s = SegmentScheduler(make_segments(8), spes, locations(),
+                         max_data_errors=2)
+    stats = s.run(fail_segments={3})
+    assert stats["data_errors"] == 1
+    assert stats["done"] == 7
+    assert s.segments[3].status == SegStatus.DATA_ERROR
+    assert s.segments[3].attempts <= 3
+
+
+def test_static_assignment_partition():
+    spes = [SPEState(i, NodeAddress(0, i % 2, i), speed=1e3)
+            for i in range(3)]
+    s = SegmentScheduler(make_segments(10), spes, locations())
+    a = s.static_assignment()
+    got = sorted(i for v in a.values() for i in v)
+    assert got == list(range(10))
+    loads = [len(v) for v in a.values()]
+    assert max(loads) - min(loads) <= 1
+
+
+def test_segment_planning_bounds():
+    """§3.5.1: per-segment size clamped to [S_min, S_max], whole records,
+    single file."""
+    files = [("/f/a", 1000), ("/f/b", 500)]
+    segs = SphereStream.plan_segments(1500, record_bytes=100, files=files,
+                                      s_min=10_000, s_max=20_000, num_spes=4)
+    assert sum(s.num_records for s in segs) == 1500
+    for s in segs:
+        assert s.num_records <= 200          # S_max / record_bytes
+        assert s.file_path in ("/f/a", "/f/b")
+    # no segment crosses a file boundary
+    for s in segs:
+        limit = dict(files)[s.file_path]
+        assert s.offset + s.num_records <= limit
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_segs=st.integers(1, 24),
+    n_spes=st.integers(1, 6),
+    crash=st.lists(st.integers(0, 5), max_size=2, unique=True),
+)
+def test_property_completion_under_failures(n_segs, n_spes, crash):
+    """As long as >= 1 SPE survives, every segment completes exactly once."""
+    spes = []
+    for i in range(n_spes):
+        fail = 1.0 if i in crash and i < n_spes - 1 else None
+        spes.append(SPEState(i, NodeAddress(0, i % 2, i), speed=100.0,
+                             fail_at=fail))
+    s = SegmentScheduler(make_segments(n_segs), spes, locations(),
+                         timeout=0.5)
+    stats = s.run()
+    assert stats["done"] == n_segs
+    completed = [seg.completed_by for seg in s.segments]
+    assert all(c is not None for c in completed)
+    # completions only by live-at-the-time SPEs; each segment exactly once
+    assert len(completed) == n_segs

@@ -1,0 +1,175 @@
+"""Sector storage cloud: replication, recovery, security, topology."""
+
+import os
+
+import pytest
+
+from repro.sector import (AccessDenied, Master, NodeAddress,
+                          ReplicationDaemon, SectorClient, SecurityServer,
+                          SlaveNode, Topology)
+from repro.sector.topology import distance, spread_choice
+
+
+def make_deployment(tmp_path, pods=2, racks=2, nodes=3, replication=3,
+                    block_mode=False):
+    sec = SecurityServer()
+    sec.add_user("u", "pw")
+    sec.add_user("reader", "pw2", acls=[("/public", "r")])
+    sec.allow_slaves("10.1.0.0/16")
+    m = Master(sec, replication_factor=replication, block_mode=block_mode,
+               block_size=64)
+    topo = Topology(pods=pods, racks=racks, nodes_per_rack=nodes)
+    for i, addr in enumerate(topo.all_addresses()):
+        m.register_slave(SlaveNode(i, addr, str(tmp_path / f"s{i}"),
+                                   ip=f"10.1.0.{i}"))
+    return sec, m
+
+
+def test_upload_download_roundtrip(tmp_path):
+    _, m = make_deployment(tmp_path)
+    c = SectorClient(m, "u", "pw", client_addr=NodeAddress(0, 0, 0))
+    data = b"x" * 10_000
+    meta = c.upload("/d/a.dat", data)
+    assert meta.size == 10_000
+    assert c.download("/d/a.dat") == data
+
+
+def test_replication_daemon_reaches_factor_and_spreads(tmp_path):
+    _, m = make_deployment(tmp_path)
+    c = SectorClient(m, "u", "pw")
+    c.upload("/d/a.dat", b"payload" * 100)
+    d = ReplicationDaemon(m)
+    d.run_until_stable()
+    meta = m.lookup("/d/a.dat")
+    assert len(meta.locations) == 3
+    # replicas span > 1 pod (topology-aware placement)
+    pods = {m.slaves[s].address.pod for s in meta.locations}
+    assert len(pods) > 1
+
+
+def test_slave_failure_rereplicates_and_download_survives(tmp_path):
+    _, m = make_deployment(tmp_path)
+    c = SectorClient(m, "u", "pw")
+    data = b"abc" * 1000
+    c.upload("/d/a.dat", data)
+    d = ReplicationDaemon(m)
+    d.run_until_stable()
+    victim = next(iter(m.lookup("/d/a.dat").locations))
+    m.slaves[victim].kill(wipe=True)
+    d.run_until_stable()
+    live = [s for s in m.lookup("/d/a.dat").locations if m.slaves[s].alive]
+    assert len(live) >= 3
+    assert c.download("/d/a.dat") == data
+
+
+def test_metadata_scan_recovery(tmp_path):
+    sec, m = make_deployment(tmp_path)
+    c = SectorClient(m, "u", "pw")
+    c.upload("/d/a.dat", b"a" * 100)
+    c.upload("/d/b.dat", b"b" * 200)
+    ReplicationDaemon(m).run_until_stable()
+    # new master, same slaves: index rebuilt purely from directory scans
+    m2 = Master(sec, replication_factor=3)
+    for s in m.slaves.values():
+        m2.register_slave(s)
+    assert set(m2.index) == {"/d/a.dat", "/d/b.dat"}
+    assert len(m2.index["/d/a.dat"].locations) == 3
+    assert m2.index["/d/b.dat"].size == 200
+
+
+def test_security_acl_and_ip(tmp_path):
+    sec, m = make_deployment(tmp_path)
+    with pytest.raises(AccessDenied):
+        SectorClient(m, "u", "wrong")
+    reader = SectorClient(m, "reader", "pw2")
+    with pytest.raises(AccessDenied):
+        reader.upload("/public/x", b"nope")  # read-only ACL
+    with pytest.raises(AccessDenied):
+        m.download(reader.session_id, "/private/y")
+    writer = SectorClient(m, "u", "pw")
+    writer.upload("/public/x", b"data")
+    assert reader.download("/public/x") == b"data"
+
+
+def test_slave_ip_allowlist(tmp_path):
+    sec, m = make_deployment(tmp_path)
+    rogue = SlaveNode(99, NodeAddress(0, 0, 99), str(tmp_path / "rogue"),
+                      ip="192.168.1.1")
+    with pytest.raises(AccessDenied):
+        m.register_slave(rogue)
+
+
+def test_ip_restricted_user(tmp_path):
+    sec, m = make_deployment(tmp_path)
+    sec.add_user("locked", "pw", ip_ranges=["10.5.0.0/24"])
+    with pytest.raises(AccessDenied):
+        SectorClient(m, "locked", "pw", client_ip="10.9.9.9")
+    SectorClient(m, "locked", "pw", client_ip="10.5.0.7")  # ok
+
+
+def test_block_mode_roundtrip(tmp_path):
+    """Hadoop-style block store baseline: chunked + replicate-at-write."""
+    _, m = make_deployment(tmp_path, block_mode=True, replication=2)
+    c = SectorClient(m, "u", "pw")
+    data = bytes(range(256)) * 4  # 1024 bytes -> 16 blocks of 64
+    c.upload("/blk/a.dat", data)
+    assert c.download("/blk/a.dat") == data
+    blocks = [p for p in m.index if p.startswith("/blk/a.dat.blk")]
+    assert len(blocks) == 16
+    assert all(len(m.index[b].locations) == 2 for b in blocks)
+
+
+def test_locality_preference(tmp_path):
+    _, m = make_deployment(tmp_path)
+    c_far = SectorClient(m, "u", "pw", client_addr=NodeAddress(1, 1, 0))
+    c_far.upload("/d/here.dat", b"z" * 64)
+    meta = m.lookup("/d/here.dat")
+    src = m.slaves[next(iter(meta.locations))]
+    assert src.address.pod == 1  # stored near the uploader
+
+
+def test_topology_distance_and_spread():
+    a = NodeAddress(0, 0, 0)
+    assert distance(a, NodeAddress(0, 0, 0)) == 0
+    assert distance(a, NodeAddress(0, 0, 1)) == 1
+    assert distance(a, NodeAddress(0, 1, 0)) == 2
+    assert distance(a, NodeAddress(1, 0, 0)) == 3
+    pick = spread_choice(
+        [NodeAddress(0, 0, 1), NodeAddress(0, 1, 0), NodeAddress(1, 0, 0)],
+        existing=[a])
+    assert pick == NodeAddress(1, 0, 0)  # max topology spread
+
+
+def test_transport_udt_vs_tcp_and_disk_cap():
+    """§2.4: UDT holds wide-area bandwidth where TCP collapses with RTT;
+    disk bandwidth caps everything when configured (Fig 4)."""
+    from repro.sector.transport import (PAPER_LINKS, PAPER_DISK_BW,
+                                        TransferSimulator)
+    src, dst = NodeAddress(0, 0, 0), NodeAddress(1, 0, 0)
+    udt = TransferSimulator(links=PAPER_LINKS, protocol="udt")
+    tcp = TransferSimulator(links=PAPER_LINKS, protocol="tcp")
+    assert udt.effective_bandwidth(src, dst) > \
+        3 * tcp.effective_bandwidth(src, dst)
+    # same-rack short RTT: TCP nearly keeps up
+    near = NodeAddress(0, 0, 1)
+    assert tcp.effective_bandwidth(src, near) > \
+        0.9 * udt.effective_bandwidth(src, near)
+    capped = TransferSimulator(links=PAPER_LINKS, protocol="udt",
+                               disk_bw=PAPER_DISK_BW)
+    assert capped.effective_bandwidth(src, dst) == PAPER_DISK_BW
+    t = udt.transfer_time(src, dst, 10 ** 9)
+    assert t > 0 and udt.bytes_moved == 10 ** 9
+
+
+def test_storage_mode_read_amplification():
+    """Paper Table 2: file mode reads touch ONE slave; block mode touches
+    ceil(size/block) slaves."""
+    import sys, os as _os
+    sys.path.insert(0, _os.path.abspath(
+        _os.path.join(_os.path.dirname(__file__), "..")))
+    from benchmarks.storage_modes import run as run_modes
+    lines = run_modes()
+    file_line = next(l for l in lines if l.startswith("storage_file"))
+    block_line = next(l for l in lines if l.startswith("storage_block"))
+    assert "read_transfers_per_file=1" in file_line
+    assert "read_transfers_per_file=8" in block_line

@@ -1,0 +1,202 @@
+"""Trainer + Sector checkpointing + data pipeline integration."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import (SectorDataPipeline, synthetic_tokens,
+                        upload_token_dataset)
+from repro.models import build
+from repro.sector import (Master, NodeAddress, ReplicationDaemon,
+                          SectorClient, SecurityServer, SlaveNode, Topology)
+from repro.train.checkpoint import SectorCheckpointer
+from repro.train.optimizer import (AdamWConfig, adamw_update, init_opt_state,
+                                   lr_schedule, zero1_specs)
+from repro.train.trainer import build_train_step
+
+
+@pytest.fixture
+def sector(tmp_path):
+    sec = SecurityServer()
+    sec.add_user("u", "pw")
+    sec.allow_slaves("10.0.0.0/8")
+    m = Master(sec, replication_factor=2)
+    topo = Topology(pods=1, racks=2, nodes_per_rack=2)
+    for i, addr in enumerate(topo.all_addresses()):
+        m.register_slave(SlaveNode(i, addr, str(tmp_path / f"s{i}"),
+                                   ip=f"10.0.0.{i + 1}"))
+    c = SectorClient(m, "u", "pw", client_addr=NodeAddress(0, 0, 0))
+    return m, c, ReplicationDaemon(m)
+
+
+def tiny_model():
+    cfg = get_smoke_config("tinyllama_1_1b")
+    return cfg, build(cfg)
+
+
+def test_loss_decreases(sector):
+    m, c, daemon = sector
+    cfg, model = tiny_model()
+    toks = synthetic_tokens(60_000, cfg.vocab)
+    upload_token_dataset(c, "/corpus/t", toks, num_slices=4)
+    pipe = SectorDataPipeline(m, c, "/corpus/t", batch=8, seq_len=32)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    step = jax.jit(build_train_step(model, opt_cfg, None))
+    losses = []
+    it = iter(pipe)
+    for i in range(60):
+        try:
+            batch = next(it)
+        except StopIteration:
+            it = iter(pipe)
+            batch = next(it)
+        params, opt, metrics = step(params, opt,
+                                    {k: jnp.asarray(v)
+                                     for k, v in batch.items()})
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.3
+    assert np.isfinite(losses).all()
+
+
+def test_grad_accumulation_matches_big_batch():
+    cfg, model = tiny_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0,
+                                     cfg.vocab),
+    }
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    s1 = jax.jit(build_train_step(model, opt_cfg, None, accum_steps=1))
+    s4 = jax.jit(build_train_step(model, opt_cfg, None, accum_steps=4))
+    p1, _, _ = s1(params, opt, batch)
+    p4, _, _ = s4(params, init_opt_state(params), batch)
+    diffs = [float(jnp.max(jnp.abs(a - b)))
+             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4))]
+    assert max(diffs) < 5e-3  # same update up to microbatch loss-mean jitter
+
+
+def test_checkpoint_roundtrip_and_md5(sector):
+    m, c, daemon = sector
+    cfg, model = tiny_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    ck = SectorCheckpointer(c, "/ckpt/t", num_slices=4)
+    ck.save(10, {"params": params, "opt": opt})
+    daemon.run_until_stable()
+    like = {"params": params, "opt": opt}
+    restored, step = ck.restore(like)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(like), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_survives_slave_loss(sector):
+    m, c, daemon = sector
+    cfg, model = tiny_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ck = SectorCheckpointer(c, "/ckpt/t", num_slices=4)
+    ck.save(5, params)
+    daemon.run_until_stable()      # replication factor 2 reached
+    # kill one slave holding a slice; download must use the replica
+    slice_path = "/ckpt/t/step_00000005/slice.00000"
+    victim = next(iter(m.lookup(slice_path).locations))
+    m.slaves[victim].kill(wipe=True)
+    restored, step = ck.restore(params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint(sector):
+    m, c, daemon = sector
+    cfg, model = tiny_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ck = SectorCheckpointer(c, "/ckpt/a", num_slices=2)
+    ck.save(1, params, blocking=False)
+    ck.wait()
+    assert ck.list_steps() == [1]
+
+
+def test_checkpoint_gc_keeps_last(sector):
+    m, c, daemon = sector
+    cfg, model = tiny_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ck = SectorCheckpointer(c, "/ckpt/g", num_slices=2, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, params)
+    assert ck.list_steps() == [3, 4]
+
+
+def test_pipeline_locality_and_failover(sector):
+    m, c, daemon = sector
+    cfg, model = tiny_model()
+    toks = synthetic_tokens(30_000, cfg.vocab)
+    upload_token_dataset(c, "/corpus/f", toks, num_slices=4)
+    daemon.run_until_stable()
+    pipe = SectorDataPipeline(m, c, "/corpus/f", batch=4, seq_len=32,
+                              host_id=0, num_hosts=2)
+    b0 = next(iter(pipe))
+    assert b0["tokens"].shape == (4, 32)
+    # tokens/labels are shifted views of the same stream
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+    # kill a slave: the pipeline keeps reading via replicas
+    victim = list(m.slaves)[0]
+    m.slaves[victim].kill()
+    count = sum(1 for _ in pipe)
+    assert count > 0
+
+
+def test_lr_schedule_and_clipping():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_ratio=0.1, grad_clip=1.0)
+    assert float(lr_schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr_schedule(cfg, jnp.asarray(110))) == pytest.approx(0.1)
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    opt = init_opt_state(params)
+    _, _, metrics = adamw_update(cfg, params, grads, opt)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_zero1_specs_shards_largest_replicated_dim():
+    from jax.sharding import PartitionSpec as P
+    specs = {"emb": P("model", None), "w": P(None, "model")}
+    shapes = {"emb": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+              "w": jax.ShapeDtypeStruct((32, 64), jnp.float32)}
+    out = zero1_specs(specs, shapes, ("data",), {"data": 8, "model": 4})
+    assert out["emb"] == P("model", "data")
+    assert out["w"] == P("data", "model")
+
+
+def test_bf16_params_with_fp32_master_trains():
+    """bf16 weights + fp32 master: loss decreases and params stay bf16."""
+    import dataclasses
+    cfg, model = tiny_model()
+    params, _ = model.init(jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+    opt = init_opt_state(params, master=True)
+    assert "master" in opt
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=0, total_steps=30)
+    step = jax.jit(build_train_step(model, opt_cfg, None))
+    rng = np.random.default_rng(0)
+    losses = []
+    for i in range(30):
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, 64, (8, 32)), jnp.int32),
+        }
+        batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert all(p.dtype == jnp.bfloat16 for p in jax.tree.leaves(params))
+    assert all(w.dtype == jnp.float32
+               for w in jax.tree.leaves(opt["master"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
