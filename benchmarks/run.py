@@ -14,9 +14,10 @@ import traceback
 def main() -> None:
     from benchmarks import (kernel_bench, moe_dispatch, roofline,
                             scalability, sdss_distribution, storage_modes,
-                            terasort)
+                            terasort, wan_shuffle)
     sections = {
         "terasort": terasort.run,            # paper Table 1
+        "wan_shuffle": wan_shuffle.run,      # §2.2 wide-area shuffle
         "sdss": sdss_distribution.run,       # paper Figs 4-5
         "scalability": scalability.run,      # §3.5.2 claims
         "storage": storage_modes.run,        # paper Table 2 (files vs blocks)

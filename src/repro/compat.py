@@ -1,0 +1,56 @@
+"""Version-compatibility shims over the jax API surface we use.
+
+The codebase is written against the modern spelling (``jax.shard_map`` with
+``check_vma``, ``jax.lax.axis_size``, ``jax.make_mesh(..., axis_types=...)``);
+this module maps those onto older releases (the CPU CI container ships jax
+0.4.x, where shard_map lives in ``jax.experimental.shard_map`` and the
+replication check is called ``check_rep``). Import from here, not from jax
+directly, for any of these symbols.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+try:  # jax >= 0.6: top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_VMA_KWARG = ("check_vma" if "check_vma"
+              in inspect.signature(_shard_map_impl).parameters
+              else "check_rep")
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` with the replication-check kwarg renamed as needed."""
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs,
+              _VMA_KWARG: check_vma}
+    if f is None:
+        return functools.partial(_shard_map_impl, **kwargs)
+    return _shard_map_impl(f, **kwargs)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis, callable inside shard_map.
+
+    ``psum`` of a Python constant is evaluated statically (it is just
+    ``size * x``), so this returns a concrete int on every jax we support.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """``jax.make_mesh`` ignoring ``axis_types`` on jaxes that predate it."""
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params:
+        from jax.sharding import AxisType
+        kind = AxisType.Explicit if explicit else AxisType.Auto
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(kind,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -18,7 +18,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.core.shuffle import sphere_shuffle
 

@@ -23,17 +23,44 @@ pattern. Records beyond capacity are dropped and *counted* (``dropped``), the
 same contract MoE capacity-factor dispatch uses — and indeed
 :mod:`repro.models.moe` calls this exact function for expert dispatch.
 
-All functions here run **inside** ``shard_map`` and communicate via
+Wide-area (two-level) form — paper §2.2: Sector "can manage data not only
+within a data center, but also across geographically distributed data
+centers". Over a 2-D ``(dc, node)`` mesh the flat all_to_all is wasteful on
+the WAN: every device ships a fixed-capacity tile to each of the
+``(dcs-1)*nodes`` remote devices, so each cross-DC link carries ``nodes``×
+sparse tiles per destination DC. :func:`hierarchical_shuffle` instead runs
+
+  Stage A  intra-DC all_to_all along the ``node`` axis that aggregates
+           records by destination DC and pre-places them on the node-row of
+           their final owner — after this, everything bound for DC ``g``
+           sits densely packed on the staging nodes;
+  Stage B  inter-DC all_to_all along the ``dc`` axis: one dense tile per
+           remote DC per device crosses the WAN (1/nodes of the flat tile
+           count);
+  Stage C  fan-out to the final bucket owner inside the destination DC —
+           free by construction, because stage A already staged each record
+           on its owner's node-row, so arrival *is* delivery (consumers do
+           the same local regroup-by-bucket they do after a flat shuffle).
+
+Both paths share the histogram / stable-sort / gather / capacity machinery
+(:func:`_build_send`) and are selected via :class:`ShufflePlan`, which is
+built from a mesh or a :class:`repro.sector.topology.Topology`.
+
+All shuffle functions here run **inside** ``shard_map`` and communicate via
 ``axis_name`` collectives.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import math
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass
@@ -57,16 +84,80 @@ class ShuffleResult:
     dropped: jax.Array
 
 
-def _per_dest_layout(dest: jax.Array, num_dest: int):
+@dataclasses.dataclass
+class HierShuffleResult(ShuffleResult):
+    """Result of :func:`hierarchical_shuffle`.
+
+    The public fields keep the :class:`ShuffleResult` contract with
+    ``num_src = dcs``: row g holds the records relayed through DC g's staging
+    node on this device's node-row; ``src_pos`` is still the record's
+    original row at its *origin* node. The private fields thread the
+    two-stage route back for :func:`hierarchical_combine`.
+    """
+
+    a_valid: jax.Array = None   # (nodes, cap_a) stage-A receive validity
+    a_src: jax.Array = None     # (nodes, cap_a) stage-A origin rows
+    b_pos: jax.Array = None     # (dcs, cap_b) row into stage-A recv layout
+
+
+def _per_dest_layout(dest: jax.Array, num_dest: int, use_pallas: bool = False):
     """Stable-sort local records by destination; return (order, counts,
     offsets) so that destination d's records sit at
-    order[offsets[d] : offsets[d] + counts[d]]."""
-    n = dest.shape[0]
+    order[offsets[d] : offsets[d] + counts[d]].
+
+    The histogram is the Pallas ``bucket_hist`` kernel when requested, else
+    an O(n) bincount (both drop ids outside [0, num_dest) — the overflow
+    destination)."""
     order = jnp.argsort(dest, stable=True)
-    counts = jnp.bincount(dest, length=num_dest)
+    if use_pallas:
+        counts = kops.bucket_histogram(dest, num_dest, use_pallas=True)
+    else:
+        counts = jnp.bincount(dest, length=num_dest)
     offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
                                jnp.cumsum(counts)[:-1]])
     return order, counts, offsets
+
+
+def _build_send(
+    columns: Sequence[jax.Array],
+    dest: jax.Array,
+    num_dest: int,
+    capacity: int,
+    use_pallas: bool = False,
+):
+    """Shared send-buffer machinery for every shuffle path.
+
+    Lays the local records out contiguously per destination (histogram +
+    stable sort) and gathers fixed-size (num_dest, capacity, ...) tiles for
+    each column. Rows with ``dest`` outside [0, num_dest) are never sent
+    (callers use ``num_dest`` as the virtual overflow destination).
+
+    Returns (tiles, in_range, origin, dropped_local):
+      tiles[i]:  (num_dest, capacity, *columns[i].shape[1:])
+      in_range:  (num_dest, capacity) bool — slot holds a real record
+      origin:    (num_dest, capacity) int32 — source row of each slot
+                 (meaningful only where ``in_range``)
+      dropped_local: () int32 — records beyond capacity, this device only.
+    """
+    n = dest.shape[0]
+    order, counts, offsets = _per_dest_layout(dest, num_dest, use_pallas)
+    cap_iota = jnp.arange(capacity, dtype=jnp.int32)[None, :]           # (1, C)
+    src_rows = offsets[:, None] + cap_iota                              # (D, C)
+    in_range = cap_iota < counts[:, None]                               # (D, C)
+    src_rows = jnp.clip(src_rows, 0, n - 1).reshape(-1)
+    origin_flat = jnp.take(order.astype(jnp.int32), src_rows)
+    tiles = []
+    for col in columns:
+        t = jnp.take(col, origin_flat, axis=0)
+        tiles.append(t.reshape((num_dest, capacity) + col.shape[1:]))
+    origin = origin_flat.reshape(num_dest, capacity)
+    dropped_local = jnp.sum(jnp.maximum(counts - capacity, 0))
+    return tiles, in_range, origin, dropped_local
+
+
+def _a2a(x: jax.Array, axis_name: str) -> jax.Array:
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
 
 
 def sphere_shuffle(
@@ -76,8 +167,9 @@ def sphere_shuffle(
     capacity: int,
     axis_name: str,
     valid: Optional[jax.Array] = None,
+    use_pallas: bool = False,
 ) -> ShuffleResult:
-    """Send each local record to the device owning its bucket.
+    """Send each local record to the device owning its bucket (flat path).
 
     Must be called inside ``shard_map``. ``num_buckets`` must be a multiple of
     the axis size; bucket b lives on device ``b // (num_buckets // D)``.
@@ -88,13 +180,14 @@ def sphere_shuffle(
         ids (e.g. -1 for padding) are not sent.
       capacity: max records any source sends to any one destination.
       valid: optional (n,) bool marking real input records.
+      use_pallas: compute the per-destination histogram with the Pallas
+        ``bucket_hist`` kernel instead of its jnp oracle.
     """
-    axis_size = jax.lax.axis_size(axis_name)
+    axis_size = compat.axis_size(axis_name)
     if num_buckets % axis_size != 0:
         raise ValueError(f"num_buckets={num_buckets} not divisible by "
                          f"axis size {axis_size}")
     bpd = num_buckets // axis_size
-    n = data.shape[0]
 
     ids = bucket_ids.astype(jnp.int32)
     ok = (ids >= 0) & (ids < num_buckets)
@@ -103,34 +196,97 @@ def sphere_shuffle(
     # invalid records get dest = axis_size (a virtual overflow destination)
     dest = jnp.where(ok, ids // bpd, axis_size)
 
-    order, counts, offsets = _per_dest_layout(dest, axis_size + 1)
-    sorted_data = jnp.take(data, order, axis=0)
-    sorted_ids = jnp.take(ids, order, axis=0)
+    (send_data, send_ids), in_range, origin, dropped_local = _build_send(
+        [data, ids], dest, axis_size, capacity, use_pallas)
+    send_bucket = jnp.where(in_range, send_ids, -1)
+    send_src = jnp.where(in_range, origin, -1)
 
-    # gather-based send-buffer build: slot (d, c) <- sorted row offsets[d]+c
-    cap_iota = jnp.arange(capacity, dtype=jnp.int32)[None, :]           # (1, C)
-    src_rows = offsets[:axis_size, None] + cap_iota                     # (D, C)
-    in_range = cap_iota < counts[:axis_size, None]                      # (D, C)
-    src_rows = jnp.clip(src_rows, 0, n - 1)
-    send_data = jnp.take(sorted_data, src_rows.reshape(-1), axis=0)
-    send_data = send_data.reshape((axis_size, capacity) + data.shape[1:])
-    send_bucket = jnp.where(in_range, jnp.take(sorted_ids, src_rows), -1)
-    send_src = jnp.where(in_range, jnp.take(order.astype(jnp.int32), src_rows), -1)
-    send_valid = in_range
-
-    dropped_local = jnp.sum(jnp.maximum(counts[:axis_size] - capacity, 0))
     dropped = jax.lax.psum(dropped_local, axis_name)
+    return ShuffleResult(
+        data=_a2a(send_data, axis_name),
+        valid=_a2a(in_range, axis_name),
+        bucket=_a2a(send_bucket, axis_name),
+        src_pos=_a2a(send_src, axis_name),
+        dropped=dropped,
+    )
 
-    recv_data = jax.lax.all_to_all(send_data, axis_name, split_axis=0,
-                                   concat_axis=0, tiled=True)
-    recv_bucket = jax.lax.all_to_all(send_bucket, axis_name, split_axis=0,
-                                     concat_axis=0, tiled=True)
-    recv_src = jax.lax.all_to_all(send_src, axis_name, split_axis=0,
-                                  concat_axis=0, tiled=True)
-    recv_valid = jax.lax.all_to_all(send_valid, axis_name, split_axis=0,
-                                    concat_axis=0, tiled=True)
-    return ShuffleResult(data=recv_data, valid=recv_valid, bucket=recv_bucket,
-                         src_pos=recv_src, dropped=dropped)
+
+def hierarchical_shuffle(
+    data: jax.Array,
+    bucket_ids: jax.Array,
+    num_buckets: int,
+    capacity_a: int,
+    capacity_b: int,
+    dc_axis: str,
+    node_axis: str,
+    valid: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+) -> HierShuffleResult:
+    """Two-level wide-area shuffle over a ``(dc, node)`` mesh (see module
+    docstring). Must be called inside ``shard_map`` over both axes.
+
+    Bucket ownership matches the flat layout on the row-major flattened
+    device order: bucket b lives on global device ``b // bpd`` =
+    ``(dc, node) = (b // bpd // nodes, b // bpd % nodes)``.
+
+    Args:
+      capacity_a: stage-A tile size — max records one node sends to one
+        sibling node inside its DC (≈ n_local / nodes × capacity_factor).
+      capacity_b: stage-B (WAN) tile size — max staged records one node
+        sends to one remote DC (≈ n_local / dcs × capacity_factor).
+    """
+    dcs = compat.axis_size(dc_axis)
+    nodes = compat.axis_size(node_axis)
+    num_devices = dcs * nodes
+    if num_buckets % num_devices != 0:
+        raise ValueError(f"num_buckets={num_buckets} not divisible by "
+                         f"mesh size {dcs}x{nodes}")
+    bpd = num_buckets // num_devices
+
+    ids = bucket_ids.astype(jnp.int32)
+    ok = (ids >= 0) & (ids < num_buckets)
+    if valid is not None:
+        ok = ok & valid
+    owner = jnp.where(ok, ids // bpd, 0)
+
+    # Stage A: intra-DC exchange, keyed by the owner's node-row. This both
+    # aggregates by destination DC (all records for DC g end up contiguous on
+    # the staging nodes) and pre-places records so stage C is a no-op.
+    dest_a = jnp.where(ok, owner % nodes, nodes)
+    (ta_data, ta_ids), in_a, origin_a, drop_a = _build_send(
+        [data, ids], dest_a, nodes, capacity_a, use_pallas)
+    a_data = _a2a(ta_data, node_axis)
+    a_ids = _a2a(jnp.where(in_a, ta_ids, -1), node_axis)
+    a_src = _a2a(jnp.where(in_a, origin_a, -1), node_axis)
+    a_valid = _a2a(in_a, node_axis)
+
+    # Stage B: inter-DC exchange along the dc axis — the only WAN traffic.
+    # One dense (capacity_b, *rec) tile per remote DC per device.
+    n_staged = nodes * capacity_a
+    f_data = a_data.reshape((n_staged,) + data.shape[1:])
+    f_ids = a_ids.reshape(n_staged)
+    f_src = a_src.reshape(n_staged)
+    f_valid = a_valid.reshape(n_staged)
+    pos_a = jnp.arange(n_staged, dtype=jnp.int32)
+    owner_b = jnp.where(f_valid, f_ids, 0) // bpd
+    dest_b = jnp.where(f_valid, owner_b // nodes, dcs)
+    (tb_data, tb_ids, tb_src, tb_pos), in_b, _, drop_b = _build_send(
+        [f_data, f_ids, f_src, pos_a], dest_b, dcs, capacity_b, use_pallas)
+
+    recv_data = _a2a(tb_data, dc_axis)
+    recv_bucket = _a2a(jnp.where(in_b, tb_ids, -1), dc_axis)
+    recv_src = _a2a(jnp.where(in_b, tb_src, -1), dc_axis)
+    recv_pos = _a2a(jnp.where(in_b, tb_pos, -1), dc_axis)
+    recv_valid = _a2a(in_b, dc_axis)
+
+    # Stage C (fan-out inside the destination DC) is free: stage A staged
+    # every record on its final owner's node-row, so stage B delivered it.
+    dropped = jax.lax.psum(jax.lax.psum(drop_a + drop_b, dc_axis), node_axis)
+    return HierShuffleResult(
+        data=recv_data, valid=recv_valid, bucket=recv_bucket,
+        src_pos=recv_src, dropped=dropped,
+        a_valid=a_valid, a_src=a_src, b_pos=recv_pos,
+    )
 
 
 def sphere_combine(
@@ -146,12 +302,9 @@ def sphere_combine(
 
     Returns (combined (num_local_out, *out), hit_count (num_local_out,)).
     """
-    back = jax.lax.all_to_all(processed, axis_name, split_axis=0,
-                              concat_axis=0, tiled=True)
-    back_valid = jax.lax.all_to_all(shuffle.valid, axis_name, split_axis=0,
-                                    concat_axis=0, tiled=True)
-    back_src = jax.lax.all_to_all(shuffle.src_pos, axis_name, split_axis=0,
-                                  concat_axis=0, tiled=True)
+    back = _a2a(processed, axis_name)
+    back_valid = _a2a(shuffle.valid, axis_name)
+    back_src = _a2a(shuffle.src_pos, axis_name)
     flat = back.reshape((-1,) + back.shape[2:])
     fvalid = back_valid.reshape(-1)
     fsrc = jnp.where(fvalid, back_src.reshape(-1), num_local_out)  # OOB drop
@@ -162,3 +315,178 @@ def sphere_combine(
     hits = jnp.zeros((num_local_out,), jnp.int32).at[fsrc].add(
         fvalid.astype(jnp.int32), mode="drop")
     return combined, hits
+
+
+def hierarchical_combine(
+    processed: jax.Array,
+    shuffle: HierShuffleResult,
+    dc_axis: str,
+    node_axis: str,
+    num_local_out: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`hierarchical_shuffle`: results ride the WAN back to
+    their staging node (reverse stage B), are scattered into the stage-A
+    receive layout, then :func:`sphere_combine` reverses stage A back to the
+    origin rows. ``processed`` must be (dcs, capacity_b, *out) aligned with
+    ``shuffle.data``."""
+    back = _a2a(processed, dc_axis)
+    back_valid = _a2a(shuffle.valid, dc_axis)
+    back_pos = _a2a(shuffle.b_pos, dc_axis)
+    out_tail = back.shape[2:]
+    flat = back.reshape((-1,) + out_tail)
+    fvalid = back_valid.reshape(-1)
+    n_staged = shuffle.a_valid.size
+    fpos = jnp.where(fvalid, back_pos.reshape(-1), n_staged)       # OOB drop
+    masked = flat * fvalid.reshape((-1,) + (1,) * (flat.ndim - 1)).astype(flat.dtype)
+    buf = jnp.zeros((n_staged + 1,) + out_tail, processed.dtype)
+    buf = buf.at[fpos].add(masked, mode="drop")[:n_staged]
+    buf = buf.reshape(shuffle.a_valid.shape + out_tail)
+    # records that survived stage A but were dropped at stage B got no result
+    # back — mask them out so hit_count keeps the flat-path contract
+    # (hits == 0 for undelivered records)
+    delivered = jnp.zeros((n_staged + 1,), bool).at[fpos].set(
+        True, mode="drop")[:n_staged]
+    a_valid = shuffle.a_valid & delivered.reshape(shuffle.a_valid.shape)
+    synth = ShuffleResult(data=buf, valid=a_valid, bucket=None,
+                          src_pos=shuffle.a_src, dropped=None)
+    return sphere_combine(buf, synth, node_axis, num_local_out)
+
+
+# -- topology-parameterized plan ---------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShufflePlan:
+    """A compiled-shape shuffle strategy: which mesh axes to exchange over,
+    with what per-tile capacities. One axis → flat all_to_all; two axes
+    (dc, node) → the two-level hierarchical path.
+
+    Built host-side (shapes must be static), used inside ``shard_map``.
+    """
+
+    num_buckets: int
+    axes: Tuple[str, ...]        # ("data",) flat, or (dc_axis, node_axis)
+    shape: Tuple[int, ...]       # mesh extent of each axis
+    capacities: Tuple[int, ...]  # (capacity,) or (capacity_a, capacity_b)
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        if len(self.axes) not in (1, 2) or len(self.axes) != len(self.shape):
+            raise ValueError(f"bad plan axes={self.axes} shape={self.shape}")
+        if len(self.capacities) != len(self.axes):
+            raise ValueError("need one capacity per shuffle stage")
+        if self.num_buckets % self.num_devices != 0:
+            raise ValueError(f"num_buckets={self.num_buckets} not divisible "
+                             f"by {self.num_devices} devices")
+
+    # -- static geometry ----------------------------------------------------
+    @property
+    def hierarchical(self) -> bool:
+        return len(self.axes) == 2
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def buckets_per_device(self) -> int:
+        return self.num_buckets // self.num_devices
+
+    @property
+    def recv_slots(self) -> int:
+        """Rows of the local receive buffer (= num_src * capacity)."""
+        if self.hierarchical:
+            return self.shape[0] * self.capacities[1]
+        return self.shape[0] * self.capacities[0]
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def for_mesh(cls, mesh, num_buckets: int, n_local: int,
+                 capacity_factor: float = 2.0,
+                 axes: Sequence[str] = ("data",),
+                 use_pallas: bool = False) -> "ShufflePlan":
+        """Capacities sized for ``n_local`` records/device at uniform load,
+        padded by ``capacity_factor`` (the §3.5.1 segment clamp)."""
+        axes = tuple(axes)
+        shape = tuple(mesh.shape[a] for a in axes)
+        if len(axes) == 1:
+            caps = (int(n_local / shape[0] * capacity_factor) + 1,)
+        else:
+            dcs, nodes = shape
+            caps = (int(n_local / nodes * capacity_factor) + 1,
+                    int(n_local / dcs * capacity_factor) + 1)
+        return cls(num_buckets, axes, shape, caps, use_pallas)
+
+    @classmethod
+    def from_topology(cls, topo, num_buckets: int, n_local: int,
+                      capacity_factor: float = 2.0,
+                      dc_axis: str = "dc", node_axis: str = "node",
+                      use_pallas: bool = False) -> "ShufflePlan":
+        """Map a :class:`repro.sector.topology.Topology` onto a plan: pods
+        become the WAN axis, racks × nodes_per_rack the intra-DC axis. A
+        single-pod topology degenerates to the flat path."""
+        nodes = topo.racks * topo.nodes_per_rack
+        if topo.pods == 1:
+            caps = (int(n_local / nodes * capacity_factor) + 1,)
+            return cls(num_buckets, (node_axis,), (nodes,), caps, use_pallas)
+        caps = (int(n_local / nodes * capacity_factor) + 1,
+                int(n_local / topo.pods * capacity_factor) + 1)
+        return cls(num_buckets, (dc_axis, node_axis), (topo.pods, nodes),
+                   caps, use_pallas)
+
+    # -- shard_map-side ops -------------------------------------------------
+    def device_index(self) -> jax.Array:
+        """Global device index in bucket-ownership order (inside shard_map)."""
+        if self.hierarchical:
+            return (jax.lax.axis_index(self.axes[0]) * self.shape[1]
+                    + jax.lax.axis_index(self.axes[1]))
+        return jax.lax.axis_index(self.axes[0])
+
+    def pmean_axes(self) -> Tuple[str, ...]:
+        return self.axes
+
+    def shuffle(self, data: jax.Array, bucket_ids: jax.Array,
+                valid: Optional[jax.Array] = None) -> ShuffleResult:
+        if self.hierarchical:
+            return hierarchical_shuffle(
+                data, bucket_ids, self.num_buckets,
+                self.capacities[0], self.capacities[1],
+                self.axes[0], self.axes[1], valid=valid,
+                use_pallas=self.use_pallas)
+        return sphere_shuffle(data, bucket_ids, self.num_buckets,
+                              self.capacities[0], self.axes[0], valid=valid,
+                              use_pallas=self.use_pallas)
+
+    def combine(self, processed: jax.Array, result: ShuffleResult,
+                num_local_out: int) -> Tuple[jax.Array, jax.Array]:
+        if self.hierarchical:
+            return hierarchical_combine(processed, result, self.axes[0],
+                                        self.axes[1], num_local_out)
+        return sphere_combine(processed, result, self.axes[0], num_local_out)
+
+    # -- WAN cost model (host-side, used by benchmarks/wan_shuffle.py) ------
+    def wan_profile(self, dcs: int, nodes: int, rec_bytes: int,
+                    wire_segment_records: Optional[int] = None) -> dict:
+        """Per-device, per-round cross-DC traffic of this plan mapped onto a
+        ``dcs × nodes`` wide-area layout (flat plans flatten it row-major).
+
+        wan_tiles: fixed-capacity tiles shipped across a DC boundary —
+          flat: one per remote *device*; hierarchical: one per remote *DC*.
+        wan_slot_bytes: bytes the all_to_all actually ships over the WAN
+          (tiles × capacity slots, full even when half-empty).
+        wan_wire_bytes: with transfers quantized to ``wire_segment_records``
+          (the §3.5.1 S_min clamp — UDT needs big transfers to fill a long
+          fat pipe), each tile rounds up to whole wire segments.
+        """
+        if self.num_devices != dcs * nodes:
+            raise ValueError(f"plan covers {self.num_devices} devices, "
+                             f"topology has {dcs * nodes}")
+        if self.hierarchical:
+            tiles, cap = dcs - 1, self.capacities[1]
+        else:
+            tiles, cap = (dcs - 1) * nodes, self.capacities[0]
+        out = {"wan_tiles": tiles, "wan_slot_bytes": tiles * cap * rec_bytes}
+        if wire_segment_records:
+            q = wire_segment_records
+            out["wan_wire_bytes"] = tiles * (-(-cap // q) * q) * rec_bytes
+        return out

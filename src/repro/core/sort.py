@@ -24,14 +24,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+import math
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
-from repro.core.shuffle import sphere_shuffle
+from repro.core.shuffle import ShufflePlan
 from repro.kernels import ops as kops
 
 KEY_MAX = jnp.iinfo(jnp.int32).max
@@ -94,30 +95,54 @@ def terasort(
     keys: jax.Array,
     payload: jax.Array,
     mesh: Mesh,
-    axis: str = "data",
+    axis: Union[str, Sequence[str]] = "data",
     splitters: Optional[jnp.ndarray] = None,
     capacity_factor: float = 2.0,
     use_pallas: bool = True,
     buckets_per_device: int = 1,
+    plan: Optional[ShufflePlan] = None,
 ) -> SortResult:
     """Globally sort (keys, payload) sharded over ``axis``.
 
     keys: (N,) int32 >= 0; payload: (N,) int32 (e.g. record index into the
     90-byte values held in Sector).
+
+    ``axis`` may be a single mesh axis (flat bucket shuffle) or a pair
+    ``(dc_axis, node_axis)`` — then stage 1 runs the wide-area two-level
+    shuffle of :mod:`repro.core.shuffle`, keeping cross-DC traffic to one
+    dense tile per remote data center. An explicit ``plan`` overrides
+    ``axis``/``buckets_per_device``/``capacity_factor``: its axes and bucket
+    count drive the sharding specs and splitters. ``use_pallas`` governs the
+    stage-2 sort kernel independently of ``plan.use_pallas`` (which governs
+    the shuffle histogram) — the kernel-vs-oracle parity benchmark relies on
+    switching them separately.
     """
-    axis_size = mesh.shape[axis]
-    num_buckets = axis_size * buckets_per_device
+    if plan is not None:
+        axes = plan.axes
+        axis_size = plan.num_devices
+        num_buckets = plan.num_buckets
+    else:
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        axis_size = math.prod(mesh.shape[a] for a in axes)
+        num_buckets = axis_size * buckets_per_device
     if splitters is None:
         splitters = uniform_splitters(num_buckets)
+    elif splitters.shape[0] != num_buckets - 1:
+        raise ValueError(f"{splitters.shape[0]} splitters for "
+                         f"{num_buckets} buckets")
     n_local = keys.shape[0] // axis_size
-    capacity = int(n_local / axis_size * capacity_factor) + 1
+    if plan is None:
+        plan = ShufflePlan.for_mesh(mesh, num_buckets, n_local,
+                                    capacity_factor, axes,
+                                    use_pallas=use_pallas)
+    spec = P(axes[0]) if len(axes) == 1 else P(axes)
 
     def udf(k, p, spl):
         k = k.reshape(-1)
         p = p.reshape(-1)
         bucket = jnp.searchsorted(spl, k, side="right").astype(jnp.int32)
         rec = jnp.stack([k, p], axis=1)
-        res = sphere_shuffle(rec, bucket, num_buckets, capacity, axis)
+        res = plan.shuffle(rec, bucket)
         rk = res.data[..., 0].reshape(-1)
         rp = res.data[..., 1].reshape(-1)
         rv = res.valid.reshape(-1)
@@ -129,8 +154,8 @@ def terasort(
 
     sk, sp, sv, dropped = shard_map(
         udf, mesh=mesh,
-        in_specs=(P(axis), P(axis), P()),
-        out_specs=(P(axis), P(axis), P(axis), P()),
+        in_specs=(spec, spec, P()),
+        out_specs=(spec, spec, spec, P()),
         check_vma=False,
     )(keys, payload, splitters)
     return SortResult(keys=sk, payload=sp, valid=sv, dropped=dropped)

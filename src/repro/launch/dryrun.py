@@ -129,7 +129,7 @@ def moe_active_fraction(model: Model, sds) -> float:
     total = sum(l.size for l in jax.tree.leaves(sds))
     if not cfg.is_moe:
         return 1.0
-    flat = jax.tree.flatten_with_path(sds)[0]
+    flat = jax.tree_util.tree_flatten_with_path(sds)[0]
     expert_sz = sum(l.size for path, l in flat
                     if any(getattr(p, "key", None) in
                            ("w_gate", "w_up", "w_down") for p in path)

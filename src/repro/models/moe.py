@@ -16,15 +16,16 @@ Experts are zero-padded to a multiple of the expert-parallel axis (qwen2-moe:
 from __future__ import annotations
 
 import functools
+import math
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
-from repro.core.shuffle import sphere_combine, sphere_shuffle
+from repro.core.shuffle import ShufflePlan, _build_send
 from repro.models.layers import COMPUTE_DTYPE, dense_init
 
 
@@ -101,16 +102,20 @@ def _shared_ffn(params, x):
 
 # -- sphere (bucket shuffle) dispatch ----------------------------------------------
 
-def _moe_sphere_local(params_local, x_local, cfg: ModelConfig, tp: int,
-                      axis_name: str):
-    """Runs inside shard_map. x_local: (b, s_loc, d) — sequence sharded over
-    the expert-parallel axis so every rank contributes distinct tokens."""
+def _moe_sphere_local(params_local, x_local, cfg: ModelConfig,
+                      plan: ShufflePlan):
+    """Runs inside shard_map. x_local: (b, s_loc, d) — tokens sharded over
+    the expert-parallel axes so every rank contributes distinct tokens. The
+    plan decides the wire pattern: flat all_to_all over one axis, or the
+    two-level (dc, node) WAN shuffle for cross-data-center expert
+    parallelism."""
     b, s_loc, d = x_local.shape
     n = b * s_loc
     x_flat = x_local.reshape(n, d)
     top_i, top_p, aux = _route(params_local, x_flat, cfg)
 
     k = cfg.top_k
+    ep = plan.num_devices
     # records: token replicated k times, carrying its routing prob.
     # bf16 on the wire: halves the all-to-all bytes (§Perf H4); the prob
     # column round-trips bf16 with ~3 decimal digits — enough for combine
@@ -119,29 +124,21 @@ def _moe_sphere_local(params_local, x_local, cfg: ModelConfig, tp: int,
         [jnp.repeat(x_flat, k, axis=0).astype(COMPUTE_DTYPE),
          top_p.reshape(n * k, 1).astype(COMPUTE_DTYPE)], axis=1)
     buckets = top_i.reshape(n * k)
-    num_buckets = padded_experts(cfg, tp)
-    capacity = int(n * k / tp * cfg.capacity_factor) + 1
-    res = sphere_shuffle(rec, buckets, num_buckets, capacity, axis_name)
+    num_buckets = plan.num_buckets
+    res = plan.shuffle(rec, buckets)
 
-    # local regroup: received rows -> (E_loc, C2, d) per local expert
-    e_loc = num_buckets // tp
-    me = jax.lax.axis_index(axis_name)
+    # local regroup (stage C of the shuffle, on-device): received rows ->
+    # (E_loc, C2, d) per local expert, via the shared layout machinery
+    e_loc = num_buckets // ep
+    me = plan.device_index()
     flat = res.data.reshape(-1, d + 1)
     fvalid = res.valid.reshape(-1)
     fbucket = res.bucket.reshape(-1) - me * e_loc       # local expert idx
     n_recv = flat.shape[0]
     c2 = int(n_recv / e_loc * cfg.capacity_factor) + 1
     dest = jnp.where(fvalid, fbucket, e_loc)            # invalid -> overflow
-    order = jnp.argsort(dest, stable=True)
-    counts = jnp.bincount(dest, length=e_loc + 1)
-    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
-                               jnp.cumsum(counts)[:-1]])
-    cap_iota = jnp.arange(c2, dtype=jnp.int32)[None, :]
-    rows = offsets[:e_loc, None] + cap_iota
-    in_rng = cap_iota < counts[:e_loc, None]
-    rows_c = jnp.clip(rows, 0, n_recv - 1)
-    grouped = jnp.take(jnp.take(flat, order, axis=0), rows_c.reshape(-1), axis=0)
-    grouped = grouped.reshape(e_loc, c2, d + 1)
+    (grouped,), in_rng, origin, _ = _build_send([flat], dest, e_loc, c2,
+                                                plan.use_pallas)
     xe, pe = grouped[..., :d], grouped[..., d]
 
     ye = _expert_ffn(params_local["w_gate"], params_local["w_up"],
@@ -149,42 +146,64 @@ def _moe_sphere_local(params_local, x_local, cfg: ModelConfig, tp: int,
     ye = ye * pe[..., None].astype(COMPUTE_DTYPE)       # weight by router prob
     ye = ye * in_rng[..., None].astype(COMPUTE_DTYPE)
 
-    # inverse regroup: back to the received-row layout
+    # inverse regroup: back to the received-row layout (origin = the source
+    # row of each (expert, slot), the exact inverse gather)
     back = jnp.zeros((n_recv + 1, d), COMPUTE_DTYPE)
-    scatter_rows = jnp.where(in_rng, jnp.take(order, rows_c), n_recv)
+    scatter_rows = jnp.where(in_rng, origin, n_recv)
     back = back.at[scatter_rows.reshape(-1)].set(
         ye.reshape(-1, d), mode="drop")[:n_recv]
     processed = back.reshape(res.data.shape[0], -1, d)
 
     # combine back to the n*k record rows (src_pos indexes the k-duplicated
     # record array), then sum each token's k expert contributions
-    combined, _ = sphere_combine(processed, res, axis_name, n * k)
+    combined, _ = plan.combine(processed, res, n * k)
     out = combined.reshape(n, k, d).sum(axis=1).reshape(b, s_loc, d)
-    aux = jax.lax.pmean(aux, axis_name)
+    for a in plan.pmean_axes():
+        aux = jax.lax.pmean(aux, a)
     dropped = res.dropped
     return out, aux, dropped
 
 
 def moe_apply_sphere(params, x, cfg: ModelConfig, mesh: Mesh,
-                     dp_axes: Sequence[str], tp_axis: str = "model"):
-    """x: (B, S, d) with S divisible by the tp axis size."""
-    tp = mesh.shape[tp_axis]
-    dp = tuple(dp_axes)
+                     dp_axes: Sequence[str], tp_axis: str = "model",
+                     ep_axes: Optional[Sequence[str]] = None):
+    """x: (B, S, d) with S divisible by the tp axis size.
+
+    ``ep_axes=(dc_axis, node_axis)`` spreads the experts over *both* axes —
+    wide-area expert parallelism, with tokens crossing the DC boundary via
+    the hierarchical two-level shuffle (batch shards over the dc axis,
+    sequence over the node axis).
+    """
+    b, s, d = x.shape
+    k = cfg.top_k
+    if ep_axes is not None:
+        ep_axes = tuple(ep_axes)
+        ep = math.prod(mesh.shape[a] for a in ep_axes)
+        n_local = (b // mesh.shape[ep_axes[0]]) * (s // mesh.shape[ep_axes[1]])
+        x_spec = P(ep_axes[0], ep_axes[1], None)
+        w_spec = P(ep_axes, None, None)
+    else:
+        ep_axes = (tp_axis,)
+        ep = mesh.shape[tp_axis]
+        dp = tuple(dp_axes)
+        n_local = (b // math.prod(mesh.shape[a] for a in dp)) * (s // ep)
+        x_spec = P(dp, tp_axis, None)
+        w_spec = P(tp_axis, None, None)
+    plan = ShufflePlan.for_mesh(mesh, padded_experts(cfg, ep), n_local * k,
+                                cfg.capacity_factor, ep_axes)
 
     def body(p, xin):
-        out, aux, dropped = _moe_sphere_local(p, xin, cfg, tp, tp_axis)
+        out, aux, dropped = _moe_sphere_local(p, xin, cfg, plan)
         return out, aux, dropped
 
     routed = {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")}
-    param_specs = {"router": P(None, None),
-                   "w_gate": P(tp_axis, None, None),
-                   "w_up": P(tp_axis, None, None),
-                   "w_down": P(tp_axis, None, None)}
+    param_specs = {"router": P(None, None), "w_gate": w_spec,
+                   "w_up": w_spec, "w_down": w_spec}
 
     out, aux, dropped = shard_map(
         body, mesh=mesh,
-        in_specs=(param_specs, P(dp, tp_axis, None)),
-        out_specs=(P(dp, tp_axis, None), P(), P()),
+        in_specs=(param_specs, x_spec),
+        out_specs=(x_spec, P(), P()),
         check_vma=False,
     )(routed, x)
     shared = _shared_ffn(params, x) if cfg.n_shared_experts else 0.0
@@ -224,9 +243,25 @@ def moe_apply_dense(params, x, cfg: ModelConfig):
 
 
 def moe_apply(params, x, cfg: ModelConfig, mesh: Optional[Mesh] = None,
-              dp_axes: Sequence[str] = ("data",), tp_axis: str = "model"):
+              dp_axes: Sequence[str] = ("data",), tp_axis: str = "model",
+              ep_axes: Optional[Sequence[str]] = None):
     """Select implementation: sphere bucket shuffle when the sequence can be
-    sharded over the expert axis, dense einsum otherwise."""
+    sharded over the expert axis, dense einsum otherwise. ``ep_axes``
+    requests wide-area (two-level) expert parallelism over a (dc, node)
+    axis pair — see :func:`moe_apply_sphere`.
+
+    Like the flat gate below, ``ep_axes`` is a preference, not a demand:
+    when the mesh lacks the axes or the batch/sequence don't divide them,
+    this falls back to the flat or dense path silently (decode shapes hit
+    this constantly). Call :func:`moe_apply_sphere` directly to get a hard
+    error instead."""
+    if (ep_axes is not None and mesh is not None and len(ep_axes) == 2
+            and all(a in mesh.shape for a in ep_axes)):
+        dcs, nodes = (mesh.shape[a] for a in ep_axes)
+        if (cfg.moe_impl == "sphere" and x.shape[0] % dcs == 0
+                and x.shape[1] % nodes == 0 and dcs * nodes > 1):
+            return moe_apply_sphere(params, x, cfg, mesh, dp_axes, tp_axis,
+                                    ep_axes=ep_axes)
     use_sphere = (
         cfg.moe_impl == "sphere" and mesh is not None
         and tp_axis in mesh.shape and x.shape[1] % mesh.shape[tp_axis] == 0

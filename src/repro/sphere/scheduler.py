@@ -32,10 +32,12 @@ import dataclasses
 import enum
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Set, \
+    Tuple, Union
 
 from repro.core.stream import SegmentInfo
-from repro.sector.topology import NodeAddress, distance
+from repro.sector.topology import (DIST_CROSS_POD, DIST_SAME_POD,
+                                   DIST_SAME_RACK, NodeAddress, distance)
 
 
 class SegStatus(enum.Enum):
@@ -85,8 +87,25 @@ class SegmentScheduler:
         timeout: float = 60.0,
         speculate: bool = True,
         max_data_errors: int = 2,
-        remote_read_penalty: float = 2.0,
+        remote_read_penalty: Union[float, Mapping[int, float]] = 2.0,
+        shuffle_plan=None,
     ):
+        """``remote_read_penalty`` is either the legacy scalar (applied to any
+        non-local read) or a mapping from topology distance class
+        (:mod:`repro.sector.topology` ``DIST_*``) to a slowdown multiplier —
+        cross-pod reads ride the WAN and should cost more than same-rack. A
+        mapping must price every remote class (1, 2, 3) explicitly so a
+        partial map cannot silently make remote reads free; DIST_SAME_NODE
+        may be omitted (defaults to 1.0).
+
+        ``shuffle_plan``: an optional :class:`repro.core.shuffle.ShufflePlan`
+        (duck-typed — only ``.hierarchical`` is read). When the downstream
+        shuffle is hierarchical, segments of one file should stay
+        pod-coherent: their bucket output aggregates intra-DC in stage A
+        before crossing the WAN once, so scattering a file's segments across
+        pods multiplies stage-B traffic. The assignment rules gain a
+        pod-coherence tiebreak in that case.
+        """
         self.segments = [
             SegmentState(info=s, locations=list(locations.get(s.file_path, [])))
             for s in segments
@@ -95,8 +114,22 @@ class SegmentScheduler:
         self.timeout = timeout
         self.speculate = speculate
         self.max_data_errors = max_data_errors
+        if isinstance(remote_read_penalty, Mapping):
+            missing = {DIST_SAME_RACK, DIST_SAME_POD,
+                       DIST_CROSS_POD} - set(remote_read_penalty)
+            if missing:
+                raise ValueError("remote_read_penalty mapping must price "
+                                 f"every remote distance class; missing "
+                                 f"{sorted(missing)}")
         self.remote_read_penalty = remote_read_penalty
+        self.shuffle_plan = shuffle_plan
         self.events: List[ScheduleEvent] = []
+
+    def _read_penalty(self, dloc: int) -> float:
+        """Slowdown multiplier for reading input at topology distance dloc."""
+        if isinstance(self.remote_read_penalty, Mapping):
+            return float(self.remote_read_penalty.get(dloc, 1.0))
+        return 1.0 if dloc == 0 else float(self.remote_read_penalty)
 
     # -- the paper's assignment rules ------------------------------------
     def _pick_segment(self, spe: SPEState, now: float) -> Optional[int]:
@@ -107,6 +140,27 @@ class SegmentScheduler:
                              for i, s in enumerate(self.segments)
                              if s.status == SegStatus.RUNNING}
 
+            hier = (self.shuffle_plan is not None
+                    and getattr(self.shuffle_plan, "hierarchical", False))
+            file_pods: Dict[str, Set[int]] = {}
+            if hier:
+                # pods already committed to each *pending* file — running
+                # and completed segments, so affinity survives sequential
+                # processing on few SPEs. One O(segments) scan per pick,
+                # same cost class as the pending/running_files scans above.
+                pending_files = {self.segments[i].info.file_path
+                                 for i in pending}
+                for s in self.segments:
+                    if s.info.file_path not in pending_files:
+                        continue
+                    pods = file_pods.setdefault(s.info.file_path, set())
+                    if s.status == SegStatus.RUNNING:
+                        for sid in s.running_on:
+                            pods.add(self.spes[sid].address.pod)
+                    elif (s.status == SegStatus.DONE
+                          and s.completed_by is not None):
+                        pods.add(self.spes[s.completed_by].address.pod)
+
             def rule_key(i: int) -> Tuple:
                 seg = self.segments[i]
                 # rule 1: locality — min topology distance to a replica
@@ -116,8 +170,16 @@ class SegmentScheduler:
                 # over distinct files); but never leave the SPE idle (we are
                 # already committed to assigning something).
                 same_file_penalty = 1 if seg.info.file_path in running_files else 0
+                # rule 2b (two-level shuffle only): keep a file's segments
+                # pod-coherent so their bucket output aggregates intra-DC
+                # (stage A) before crossing the WAN once in stage B.
+                pod_penalty = 0
+                if hier:
+                    pods = file_pods.get(seg.info.file_path)
+                    if pods and spe.address.pod not in pods:
+                        pod_penalty = 1
                 # rule 3: stream order
-                return (dloc, same_file_penalty, seg.info.index)
+                return (dloc, same_file_penalty, pod_penalty, seg.info.index)
 
             return min(pending, key=rule_key)
 
@@ -134,9 +196,7 @@ class SegmentScheduler:
     def _proc_time(self, spe: SPEState, seg: SegmentState) -> float:
         base = seg.info.num_records / spe.speed
         dloc = min((distance(spe.address, a) for a in seg.locations), default=3)
-        if dloc > 0:
-            base *= self.remote_read_penalty  # remote read (rule-1 rationale)
-        return base
+        return base * self._read_penalty(dloc)  # remote read (rule-1 rationale)
 
     # -- static assignment for the data pipeline --------------------------
     def static_assignment(self) -> Dict[int, List[int]]:

@@ -72,7 +72,7 @@ assert (ka == kb).all()
 def test_sphere_shuffle_invariants():
     run_spmd(PRELUDE + """
 from repro.core.shuffle import sphere_shuffle
-from jax import shard_map
+from repro.compat import shard_map
 N = 8 * 512
 data = rng.integers(0, 1000, size=(N, 3)).astype(np.int32)
 buckets = rng.integers(0, 16, size=N).astype(np.int32)
