@@ -1,0 +1,29 @@
+"""Shared example bootstrap: virtual devices + import path.
+
+Every SPMD example needs ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set **before jax initializes**, plus ``src/`` on ``sys.path``. Call
+``setup()`` as the very first statement, before importing jax:
+
+    import _bootstrap
+    _bootstrap.setup(devices=8)
+
+(The examples directory itself is on ``sys.path`` when a script is run as
+``python examples/foo.py``, so this module is importable without packaging.)
+"""
+
+import os
+import sys
+
+
+def setup(devices: int = 0) -> None:
+    """Add ``src/`` to the import path; with ``devices`` > 0, force that many
+    virtual XLA host devices (must run before jax is imported)."""
+    if devices:
+        if "jax" in sys.modules:
+            raise RuntimeError("_bootstrap.setup() must run before jax is "
+                               "imported (XLA_FLAGS is read at jax init)")
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)

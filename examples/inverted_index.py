@@ -1,68 +1,61 @@
-"""Inverted index via Map UDF + bucket shuffle + Reduce UDF (paper §3.6).
+"""Inverted index / wordcount via the unified dataflow API (paper §3.6).
 
-The paper's own example: compute word -> [pages] for a collection of web
-pages, once through the host-level Sphere engine (Sector-stored pages, SPEs,
-bucket files) and once through the compiled SPMD map_reduce (all_to_all).
+The paper's own example — word -> pages buckets — written ONCE as a
+``Dataflow`` pipeline (map -> hash bucket shuffle -> per-bucket reduce) and
+executed twice:
+
+- on the **host executor**: pages stored in Sector, SPEs with locality
+  scheduling and retry, bucket files materialized back into Sector;
+- on the **SPMD executor**: the identical pipeline object fused into one
+  jit'd shard_map with a capacity-bounded all_to_all.
+
+Both runs produce the same word -> count multiset, asserted at the end.
 
 Run:  PYTHONPATH=src python examples/inverted_index.py
 """
 
-import os
+import _bootstrap
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+_bootstrap.setup(devices=8)
 
-import sys
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
+import collections
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.mapreduce import map_reduce, reduce_by_key_sum
+from repro.core.mapreduce import default_hash, reduce_by_key_sum
+from repro.core.records import RecordCodec
 from repro.launch.train import make_sector
-from repro.sphere.engine import SphereProcess
+from repro.sphere.dataflow import Dataflow, HostExecutor, SPMDExecutor
 from repro.sphere.spe import SPE
 
+NUM_BUCKETS = 8
 
-def host_level(pages):
-    """Stage 1: extract (word, page) pairs, hash words into buckets.
-    Stage 2: aggregate each bucket (paper's bee/cow/camel example)."""
-    root = tempfile.mkdtemp(prefix="sector_ii_")
-    master, client, daemon = make_sector(root, num_slaves=4)
-    client.upload_dataset("/web/page", [p.tobytes() for p in pages])
-    daemon.run_until_stable()
-    spes = [SPE(i, master.slaves[i].address, master, client.session_id)
-            for i in range(4)]
-    proc = SphereProcess(master, client.session_id, spes)
-    n_buckets = 4
-    result = proc.run(
-        [f"/web/page.{i:05d}" for i in range(len(pages))],
-        lambda recs: recs.reshape(-1, 2), record_bytes=2,
-        bucket_fn=lambda out: {b: out[out[:, 0] % n_buckets == b]
-                               for b in range(n_buckets)},
-        num_buckets=n_buckets)
-    index = {}
-    for b, recs in result.outputs.items():
-        recs = recs.reshape(-1, 2)
-        for w in np.unique(recs[:, 0]) if len(recs) else []:
-            index[int(w)] = sorted(set(recs[recs[:, 0] == w][:, 1].tolist()))
-    return index
+#: one record = one (word, page) occurrence, 2 bytes in Sector
+PAGE_CODEC = RecordCodec.from_fields({"word": np.uint8, "page": np.uint8})
 
 
-def spmd_level(words):
-    """The same shuffle as a compiled all_to_all wordcount."""
-    mesh = jax.make_mesh((8,), ("data",))
-    wd = jax.device_put(jnp.asarray(words),
-                        NamedSharding(mesh, P("data")))
-    with mesh:
-        k, v, valid, dropped = map_reduce(
-            lambda seg: (seg, jnp.ones_like(seg)), reduce_by_key_sum,
-            wd, mesh)
-    k, v, valid = map(np.asarray, (k, v, valid))
-    return {int(a): int(b) for a, b, ok in zip(k, v, valid) if ok and a >= 0}
+def build_pipeline() -> Dataflow:
+    def emit(rec):
+        return {"key": rec["word"].astype(jnp.int32),
+                "value": jnp.ones_like(rec["word"], jnp.int32)}
+
+    def count(rec, valid):
+        keys, sums, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+        return {"key": keys, "value": sums}, keys >= 0, dropped
+
+    return (Dataflow.source(PAGE_CODEC)
+            .map(emit)
+            .shuffle(by=lambda r: default_hash(r["key"], NUM_BUCKETS),
+                     num_buckets=NUM_BUCKETS)
+            .reduce(count))
+
+
+def counts_of(result) -> dict:
+    rec = result.valid_records()
+    return {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
 
 
 def main() -> None:
@@ -72,16 +65,39 @@ def main() -> None:
         p = rng.integers(0, 26, size=(30, 2), dtype=np.uint8)
         p[:, 1] = i
         pages.append(p)
-    index = host_level(pages)
-    print(f"host-level inverted index: {len(index)} words; "
-          f"word0 -> pages {index.get(0, [])}")
+    allpages = np.concatenate(pages)
+    want = dict(collections.Counter(allpages[:, 0].tolist()))
 
-    words = rng.integers(0, 26, size=8 * 128).astype(np.int32)
-    counts = spmd_level(words)
-    import collections
-    assert counts == dict(collections.Counter(words.tolist()))
-    print(f"SPMD wordcount over 8 devices: {len(counts)} words, "
-          f"total {sum(counts.values())} (verified)")
+    df = build_pipeline()
+    print(f"pipeline: {df.describe()}")
+
+    # -- host executor: Sector storage, SPEs, bucket files -------------------
+    root = tempfile.mkdtemp(prefix="sector_ii_")
+    master, client, daemon = make_sector(root, num_slaves=4)
+    client.upload_dataset("/web/page", [p.tobytes() for p in pages])
+    daemon.run_until_stable()
+    spes = [SPE(i, master.slaves[i].address, master, client.session_id)
+            for i in range(4)]
+    host = HostExecutor(master, client, spes)
+    host_res = host.run(df, [f"/web/page.{i:05d}" for i in range(len(pages))])
+    host_counts = counts_of(host_res)
+    print(f"host (Sector/SPE):  {len(host_counts)} words, "
+          f"total {sum(host_counts.values())}, retries {host_res.retries}")
+
+    # -- SPMD executor: same pipeline, one compiled program -------------------
+    mesh = jax.make_mesh((8,), ("data",))
+    spmd = SPMDExecutor(mesh)
+    with mesh:
+        spmd_res = spmd.run(df, {"word": jnp.asarray(allpages[:, 0]),
+                                 "page": jnp.asarray(allpages[:, 1])})
+    spmd_counts = counts_of(spmd_res)
+    print(f"SPMD (8 devices):   {len(spmd_counts)} words, "
+          f"total {sum(spmd_counts.values())}, "
+          f"dropped {int(spmd_res.dropped)}")
+
+    assert host_counts == want, "host executor diverged from ground truth"
+    assert spmd_counts == want, "SPMD executor diverged from ground truth"
+    print("host == SPMD == ground truth (verified)")
 
 
 if __name__ == "__main__":

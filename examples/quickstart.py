@@ -11,11 +11,12 @@ scheduling and fault tolerance underneath.
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import os
-import sys
-import tempfile
+import _bootstrap
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_bootstrap.setup()
+
+import os
+import tempfile
 
 import numpy as np
 

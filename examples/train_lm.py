@@ -11,14 +11,15 @@ real accelerator).
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 
+import _bootstrap
+
+_bootstrap.setup()
+
 import argparse
 import dataclasses
 import os
-import sys
 import tempfile
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp

@@ -10,9 +10,16 @@ The paper's abstractions map onto SPMD JAX:
   (capacity-bounded ``all_to_all``; also drives MoE expert dispatch);
 - *two-stage sort* (Fig 3)  -> :func:`repro.core.sort.terasort`;
 - *MapReduce as Map UDF + Reduce UDF* (§3.6)
-                            -> :func:`repro.core.mapreduce.map_reduce`.
+                            -> :func:`repro.core.mapreduce.map_reduce`;
+- *records* of any fixed-shape pytree schema
+                            -> :class:`repro.core.records.RecordCodec`.
+
+These are the primitives; the one-API-two-executors layer on top is
+:mod:`repro.sphere.dataflow` (``Dataflow`` / ``SPMDExecutor`` /
+``HostExecutor``).
 """
 
+from repro.core.records import RecordCodec
 from repro.core.stream import SphereStream
 from repro.core.udf import sphere_map
 from repro.core.shuffle import ShuffleResult, sphere_shuffle, sphere_combine
@@ -20,7 +27,7 @@ from repro.core.sort import terasort, hadoop_style_sort
 from repro.core.mapreduce import map_reduce
 
 __all__ = [
-    "SphereStream", "sphere_map",
+    "RecordCodec", "SphereStream", "sphere_map",
     "ShuffleResult", "sphere_shuffle", "sphere_combine",
     "terasort", "hadoop_style_sort", "map_reduce",
 ]

@@ -4,11 +4,21 @@
 writes the output stream to local storage. A MapReduce reduce process can be
 simulated by the hashing/bucket process of Sphere."
 
-``map_reduce`` composes exactly that: a Map UDF applied per segment
-(:func:`sphere_map` semantics, inlined), a hash bucket shuffle
-(:func:`sphere_shuffle`), and a Reduce UDF applied per received bucket. The
-inverted-index example from the paper lives in ``examples/inverted_index.py``
-on top of this.
+``map_reduce`` is now a **deprecated thin shim** over the unified dataflow
+API (:mod:`repro.sphere.dataflow`) — prefer building the pipeline directly::
+
+    df = (Dataflow.source()
+          .map(lambda r: {"key": ..., "value": ...})
+          .shuffle(by=lambda r: default_hash(r["key"], nb), num_buckets=nb)
+          .reduce(...))
+    SPMDExecutor(mesh).run(df, data)
+
+Unlike the historical entry point, the dataflow path carries records through
+the shuffle via :class:`repro.core.records.RecordCodec`, so keys and values
+keep their dtypes (the old code silently cast both to int32; float64 values
+now round-trip losslessly). The inverted-index example from the paper lives
+in ``examples/inverted_index.py`` on top of the dataflow API, runnable on
+both the SPMD and the host Sector/SPE executor.
 """
 
 from __future__ import annotations
@@ -17,10 +27,7 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-from repro.compat import shard_map
-
-from repro.core.shuffle import sphere_shuffle
+from jax.sharding import Mesh
 
 
 def default_hash(keys: jax.Array, num_buckets: int) -> jax.Array:
@@ -42,37 +49,45 @@ def map_reduce(
 ):
     """Run Map -> bucket shuffle -> Reduce over ``data`` sharded on ``axis``.
 
+    .. deprecated:: use :class:`repro.sphere.dataflow.Dataflow` directly.
+
     map_udf:    local_segment -> (keys (m,), values (m,)) emitted pairs
                 (m static; emit-nothing is encoded by key = -1).
     reduce_udf: (keys, values, valid) for one device's received bucket
-                contents -> (out_keys, out_values) local reduced pairs.
-    Returns (keys, values, valid) sharded over ``axis``.
+                contents -> (out_keys, out_values) or
+                (out_keys, out_values, dropped) local reduced pairs.
+    Returns (keys, values, valid, dropped) sharded over ``axis``; ``dropped``
+    counts shuffle capacity overflow plus any drops the reduce UDF reports
+    (e.g. :func:`reduce_by_key_sum` truncation).
     """
-    axis_size = mesh.shape[axis]
-    nb = num_buckets or axis_size
+    from repro.sphere.dataflow import Dataflow, SPMDExecutor
 
-    def udf(seg):
+    nb = num_buckets or mesh.shape[axis]
+
+    def emit(seg):
         seg = seg.reshape((-1,) + seg.shape[2:]) if seg.ndim > 1 else seg
         keys, values = map_udf(seg)
-        bucket = hash_fn(keys, nb)
-        bucket = jnp.where(keys < 0, -1, bucket)  # -1 = emit nothing
-        rec = jnp.stack([keys.astype(jnp.int32), values.astype(jnp.int32)], 1)
-        m = keys.shape[0]
-        capacity = int(m / axis_size * capacity_factor) + 1
-        res = sphere_shuffle(rec, bucket, nb, capacity, axis)
-        rk = res.data[..., 0].reshape(-1)
-        rv = res.data[..., 1].reshape(-1)
-        valid = res.valid.reshape(-1)
-        out_k, out_v = reduce_udf(rk, rv, valid)
-        out_valid = out_k >= 0
-        return out_k, out_v, out_valid, res.dropped
+        return {"key": keys, "value": values}
 
-    out_k, out_v, out_valid, dropped = shard_map(
-        udf, mesh=mesh, in_specs=(P(axis),),
-        out_specs=(P(axis), P(axis), P(axis), P()),
-        check_vma=False,
-    )(data)
-    return out_k, out_v, out_valid, dropped
+    def bucket_of(rec):
+        # key < 0 = emit nothing (never sent, never counted as dropped)
+        return jnp.where(rec["key"] < 0, -1, hash_fn(rec["key"], nb))
+
+    def reduce_stage(rec, valid):
+        out = reduce_udf(rec["key"], rec["value"], valid)
+        out_k, out_v = out[0], out[1]
+        red_dropped = out[2] if len(out) > 2 else None
+        if red_dropped is None:
+            return {"key": out_k, "value": out_v}, out_k >= 0
+        return {"key": out_k, "value": out_v}, out_k >= 0, red_dropped
+
+    df = (Dataflow.source()
+          .map(emit)
+          .shuffle(by=bucket_of, num_buckets=nb,
+                   capacity_factor=capacity_factor)
+          .reduce(reduce_stage))
+    res = SPMDExecutor(mesh, axes=(axis,)).run(df, data)
+    return res.records["key"], res.records["value"], res.valid, res.dropped
 
 
 def reduce_by_key_sum(keys: jax.Array, values: jax.Array, valid: jax.Array,
@@ -80,21 +95,27 @@ def reduce_by_key_sum(keys: jax.Array, values: jax.Array, valid: jax.Array,
     """Built-in Reduce UDF: sum values per key (wordcount/inverted-index
     aggregation). Sorts by key, then segment-sums runs of equal keys.
 
-    Returns (unique_keys, sums) padded with key=-1 rows up to the input size
-    (or ``max_unique``)."""
+    Returns (unique_keys, sums, dropped) with key=-1 padding rows up to the
+    input size (or ``max_unique``). ``dropped`` counts the distinct keys that
+    did not fit in ``max_unique`` — truncation is no longer silent; it is
+    reported the same way ``sphere_shuffle.dropped`` reports capacity
+    overflow, and :func:`map_reduce` folds it into its ``dropped`` total.
+    Values keep their dtype (sums of float64 values are float64)."""
     n = keys.shape[0]
     cap = max_unique or n
     sentinel = jnp.iinfo(jnp.int32).max
     skey = jnp.where(valid, keys, sentinel)
     order = jnp.argsort(skey, stable=True)
     sk = jnp.take(skey, order)
-    sv = jnp.take(jnp.where(valid, values, 0), order)
+    sv = jnp.take(jnp.where(valid, values, jnp.zeros_like(values)), order)
     is_head = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
     seg_id = jnp.cumsum(is_head.astype(jnp.int32)) - 1        # run index per row
     run_sum = jnp.zeros((n,), sv.dtype).at[seg_id].add(sv)    # total per run
     # scatter each run's head (key, total) to slot = run index
-    slot = jnp.where(is_head & (sk != sentinel), seg_id, cap)  # OOB -> dropped
+    real_head = is_head & (sk != sentinel)
+    slot = jnp.where(real_head, seg_id, cap)                  # OOB -> dropped
     out_k = jnp.full((cap,), -1, jnp.int32).at[slot].set(sk, mode="drop")
     out_v = jnp.zeros((cap,), sv.dtype).at[slot].set(
         jnp.take(run_sum, seg_id), mode="drop")
-    return out_k, out_v
+    dropped = jnp.sum((real_head & (seg_id >= cap)).astype(jnp.int32))
+    return out_k, out_v, dropped

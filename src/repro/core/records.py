@@ -1,0 +1,218 @@
+"""RecordCodec: fixed-shape pytree records <-> flat byte rows.
+
+The paper's Sphere records are opaque byte strings (a data file plus its
+``.idx`` offset index, §3.2); the repo's shuffles want exactly one
+``(n, *rec)`` array per exchange. Historically that forced every workload
+into int32 pairs (``map_reduce`` silently cast keys *and* values). The codec
+closes the gap: a **record** is any fixed-shape pytree of arrays sharing a
+leading record axis, and the codec packs each record into a fixed-width byte
+row — the same layout in two worlds:
+
+- ``pack`` / ``unpack``: jax ops (``lax.bitcast_convert_type``), traceable
+  inside ``shard_map``/``jit`` — this is what lets
+  :class:`repro.sphere.dataflow.SPMDExecutor` ship arbitrary-dtype records
+  through the capacity-bounded ``all_to_all`` shuffle.
+- ``encode`` / ``decode``: the numpy mirror with the identical byte layout —
+  this is what the host executor writes to Sector bucket files and what an
+  SPE decodes before invoking a UDF.
+
+Byte-for-byte equality of the two paths (asserted in
+``tests/test_dataflow.py``) is what makes "write once, run in-XLA or on
+Sector" literal: a bucket file written by one executor is readable by the
+other. Layout is native-endian (little-endian on every supported platform);
+bools travel as one byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RecordCodec:
+    """Schema of one record: a pytree structure plus per-leaf dtype/shape.
+
+    ``shapes`` are the per-record *trailing* shapes — the leading record axis
+    is implicit. Construct with :meth:`from_example` (from arrays carrying a
+    leading record axis) or :meth:`from_fields` (from a {name: (dtype,
+    shape)} mapping, which fixes the field order by name).
+    """
+
+    treedef: Any
+    dtypes: Tuple[str, ...]
+    shapes: Tuple[Tuple[int, ...], ...]
+    #: byte-layout order: position i of a packed row holds flattened leaf
+    #: ``layout[i]``. Lets the on-disk field order differ from the pytree
+    #: flatten order (dict pytrees always flatten in sorted-key order).
+    layout: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if len(self.dtypes) != len(self.shapes):
+            raise ValueError("one dtype per field required")
+        if not self.layout:
+            object.__setattr__(self, "layout",
+                               tuple(range(len(self.dtypes))))
+        if sorted(self.layout) != list(range(len(self.dtypes))):
+            raise ValueError(f"layout {self.layout} is not a permutation of "
+                             f"the {len(self.dtypes)} fields")
+
+    # -- geometry -------------------------------------------------------------
+    @property
+    def field_nbytes(self) -> Tuple[int, ...]:
+        return tuple(
+            int(np.dtype(dt).itemsize * np.prod(s, dtype=np.int64))
+            for dt, s in zip(self.dtypes, self.shapes))
+
+    @property
+    def nbytes(self) -> int:
+        """Packed bytes per record (= ``record_bytes`` for Sector files)."""
+        return sum(self.field_nbytes)
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_example(cls, records: Any) -> "RecordCodec":
+        """Infer the schema from a records pytree (leading axis = records).
+
+        Works on concrete arrays and on tracers (shape/dtype only), so the
+        SPMD executor can derive shuffle codecs mid-trace.
+        """
+        leaves, treedef = jax.tree.flatten(records)
+        if not leaves:
+            raise ValueError("records pytree has no array leaves")
+        n = leaves[0].shape[0] if leaves[0].ndim else None
+        for l in leaves:
+            if l.ndim == 0 or l.shape[0] != n:
+                raise ValueError("all record fields need the same leading "
+                                 f"record axis; got shapes "
+                                 f"{[tuple(x.shape) for x in leaves]}")
+        return cls(treedef=treedef,
+                   dtypes=tuple(str(np.dtype(l.dtype)) for l in leaves),
+                   shapes=tuple(tuple(l.shape[1:]) for l in leaves))
+
+    @classmethod
+    def from_fields(cls, fields: dict) -> "RecordCodec":
+        """Build from ``{name: dtype}`` or ``{name: (dtype, trailing_shape)}``
+        — records are then dicts of arrays. The **insertion order** of
+        ``fields`` is the byte layout (how the raw record file is laid out),
+        even though dict pytrees flatten in sorted-key order."""
+        spec = {}
+        for name, f in fields.items():
+            dt, shape = f if isinstance(f, tuple) else (f, ())
+            spec[name] = (str(np.dtype(dt)), tuple(shape))
+        treedef = jax.tree.structure({k: 0 for k in spec})
+        names = sorted(spec)  # dict pytrees flatten in sorted key order
+        byte_order = list(fields)
+        return cls(treedef=treedef,
+                   dtypes=tuple(spec[k][0] for k in names),
+                   shapes=tuple(spec[k][1] for k in names),
+                   layout=tuple(names.index(k) for k in byte_order))
+
+    # -- jax path (traceable) -------------------------------------------------
+    def pack(self, records: Any) -> jax.Array:
+        """(pytree with leading axis n) -> (n, nbytes) uint8."""
+        leaves = self._check(records)
+        self._check_x64()
+        n = leaves[0].shape[0]
+        nbytes = self.field_nbytes
+        cols = []
+        for i in self.layout:
+            x = jnp.asarray(leaves[i])
+            if x.dtype == jnp.bool_:
+                x = x.astype(jnp.uint8)
+            b = jax.lax.bitcast_convert_type(x, jnp.uint8)
+            cols.append(b.reshape(n, nbytes[i]))
+        return jnp.concatenate(cols, axis=1)
+
+    def unpack(self, packed: jax.Array) -> Any:
+        """(..., nbytes) uint8 -> pytree with leading axes ``...``.
+
+        Accepts any number of leading dims (e.g. the ``(num_src, capacity)``
+        layout of a shuffle receive buffer)."""
+        if packed.shape[-1] != self.nbytes:
+            raise ValueError(f"packed rows are {packed.shape[-1]} bytes, "
+                             f"codec expects {self.nbytes}")
+        self._check_x64()
+        lead = packed.shape[:-1]
+        nbytes = self.field_nbytes
+        leaves, off = [None] * len(self.dtypes), 0
+        for i in self.layout:
+            dtype, shape, nb = np.dtype(self.dtypes[i]), self.shapes[i], nbytes[i]
+            piece = jax.lax.slice_in_dim(packed, off, off + nb, axis=-1)
+            if dtype.itemsize > 1:
+                piece = piece.reshape(lead + shape + (dtype.itemsize,))
+                leaf = jax.lax.bitcast_convert_type(piece, dtype)
+            else:
+                piece = piece.reshape(lead + shape)
+                leaf = (piece != 0 if dtype == np.bool_
+                        else jax.lax.bitcast_convert_type(piece, dtype))
+            leaves[i] = leaf
+            off += nb
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- numpy path (host executor / Sector files) ----------------------------
+    def encode(self, records: Any) -> np.ndarray:
+        """(pytree with leading axis n) -> (n, nbytes) uint8 ndarray, byte-
+        identical to :meth:`pack` of the same records."""
+        leaves = self._check(records)
+        n = int(leaves[0].shape[0])
+        nbytes = self.field_nbytes
+        cols = []
+        for i in self.layout:
+            x = np.asarray(leaves[i])
+            if x.dtype == np.bool_:
+                x = x.astype(np.uint8)
+            raw = np.ascontiguousarray(x).tobytes()
+            cols.append(np.frombuffer(raw, np.uint8).reshape(n, nbytes[i]))
+        if not cols:
+            return np.zeros((n, 0), np.uint8)
+        return np.concatenate(cols, axis=1)
+
+    def decode(self, buf: Any) -> Any:
+        """bytes or (n, nbytes)/(n*nbytes,) uint8 -> pytree of np arrays."""
+        if isinstance(buf, (bytes, bytearray, memoryview)):
+            buf = np.frombuffer(buf, np.uint8)
+        buf = np.asarray(buf, np.uint8).reshape(-1, self.nbytes)
+        n = buf.shape[0]
+        nbytes = self.field_nbytes
+        leaves, off = [None] * len(self.dtypes), 0
+        for i in self.layout:
+            dtype, shape, nb = np.dtype(self.dtypes[i]), self.shapes[i], nbytes[i]
+            piece = np.ascontiguousarray(buf[:, off:off + nb])
+            if dtype == np.bool_:
+                leaf = piece.reshape((n,) + shape).astype(np.bool_)
+            else:
+                leaf = np.frombuffer(piece.tobytes(), dtype=dtype)
+                leaf = leaf.reshape((n,) + shape)
+            leaves[i] = leaf
+            off += nb
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- internals ------------------------------------------------------------
+    def _check_x64(self) -> None:
+        """The jax path needs x64 enabled for 64-bit fields — otherwise
+        ``jnp.asarray``/``bitcast`` silently downcast and the packed rows
+        come out narrower than ``nbytes``. Fail loudly instead."""
+        if any(np.dtype(dt).itemsize == 8 and np.dtype(dt).kind in "fiu"
+               for dt in self.dtypes) and not jax.config.jax_enable_x64:
+            raise RuntimeError(
+                "codec has 64-bit fields but jax_enable_x64 is off; "
+                "jax pack/unpack would silently truncate them. Enable it "
+                "(jax.config.update('jax_enable_x64', True)) or use the "
+                "numpy encode/decode path.")
+
+    def _check(self, records: Any) -> Sequence[Any]:
+        leaves, treedef = jax.tree.flatten(records)
+        if treedef != self.treedef:
+            raise ValueError(f"records structure {treedef} does not match "
+                             f"codec structure {self.treedef}")
+        for leaf, dt, shape in zip(leaves, self.dtypes, self.shapes):
+            if str(np.dtype(leaf.dtype)) != dt or tuple(leaf.shape[1:]) != shape:
+                raise ValueError(
+                    f"field mismatch: got {np.dtype(leaf.dtype)}{tuple(leaf.shape)}, "
+                    f"codec expects {dt} with trailing shape {shape}")
+        return leaves

@@ -1,9 +1,18 @@
 """Distributed Terasort (paper §4.2, Fig 3) and the Hadoop-style baseline.
 
+``terasort`` is now a thin shim over the unified dataflow API — the whole
+two-stage sort is one pipeline::
+
+    Dataflow.source().sort(key=lambda r: r["key"], splitters=...,
+                           num_buckets=...)
+
+executed by :class:`repro.sphere.dataflow.SPMDExecutor` (or, over
+Sector-stored records, by the host executor with bucket files).
+
 Stage 1 ("hashing"): every record's key is range-partitioned into a bucket
 (``searchsorted`` against splitters — the paper's T_0 < T_1 < ... thresholds)
 and shuffled to the device owning that bucket via
-:func:`repro.core.shuffle.sphere_shuffle`.
+:class:`repro.core.shuffle.ShufflePlan` (flat or two-level wide-area).
 
 Stage 2 ("sort each bucket"): each device sorts its received records — the
 paper's point that "the SPE processes the *whole* data segment ... and does
@@ -23,17 +32,15 @@ collective term quantifies the paper's 2× claim on our hardware model.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.shuffle import ShufflePlan
-from repro.kernels import ops as kops
 
 KEY_MAX = jnp.iinfo(jnp.int32).max
 
@@ -77,20 +84,6 @@ def sampled_splitters(keys: jax.Array, num_buckets: int,
     return ssorted[idx]
 
 
-def _stage2_sort(keys, payload, validity, use_pallas: bool):
-    """Sort one device's received records; invalid rows (key forced to
-    KEY_MAX) sink to the end, so the valid prefix is simply the first
-    ``sum(validity)`` rows. Requires real keys < KEY_MAX."""
-    skey = jnp.where(validity, keys, KEY_MAX)
-    nv = jnp.sum(validity.astype(jnp.int32))
-    new_valid = jnp.arange(skey.shape[0], dtype=jnp.int32) < nv
-    if use_pallas:
-        out_k, out_v = kops.sort_kv_segments(skey[None, :], payload[None, :])
-        return out_k[0], out_v[0], new_valid
-    order = jnp.argsort(skey, stable=True)
-    return jnp.take(skey, order), jnp.take(payload, order), new_valid
-
-
 def terasort(
     keys: jax.Array,
     payload: jax.Array,
@@ -116,10 +109,15 @@ def terasort(
     stage-2 sort kernel independently of ``plan.use_pallas`` (which governs
     the shuffle histogram) — the kernel-vs-oracle parity benchmark relies on
     switching them separately.
+
+    .. deprecated:: thin shim — build the pipeline directly with
+       ``Dataflow.source().sort(...)`` and an executor; a pipeline object
+       reused across calls also reuses its compiled program.
     """
+    from repro.sphere.dataflow import Dataflow, SPMDExecutor
+
     if plan is not None:
         axes = plan.axes
-        axis_size = plan.num_devices
         num_buckets = plan.num_buckets
     else:
         axes = (axis,) if isinstance(axis, str) else tuple(axis)
@@ -130,35 +128,15 @@ def terasort(
     elif splitters.shape[0] != num_buckets - 1:
         raise ValueError(f"{splitters.shape[0]} splitters for "
                          f"{num_buckets} buckets")
-    n_local = keys.shape[0] // axis_size
-    if plan is None:
-        plan = ShufflePlan.for_mesh(mesh, num_buckets, n_local,
-                                    capacity_factor, axes,
-                                    use_pallas=use_pallas)
-    spec = P(axes[0]) if len(axes) == 1 else P(axes)
 
-    def udf(k, p, spl):
-        k = k.reshape(-1)
-        p = p.reshape(-1)
-        bucket = jnp.searchsorted(spl, k, side="right").astype(jnp.int32)
-        rec = jnp.stack([k, p], axis=1)
-        res = plan.shuffle(rec, bucket)
-        rk = res.data[..., 0].reshape(-1)
-        rp = res.data[..., 1].reshape(-1)
-        rv = res.valid.reshape(-1)
-        # order across sources is arrival-order; a full sort of the local
-        # segment (stage 2) subsumes bucket grouping since this device owns a
-        # contiguous bucket/key range.
-        sk, sp, sv = _stage2_sort(rk, rp, rv, use_pallas)
-        return sk, sp, sv, res.dropped
-
-    sk, sp, sv, dropped = shard_map(
-        udf, mesh=mesh,
-        in_specs=(spec, spec, P()),
-        out_specs=(spec, spec, spec, P()),
-        check_vma=False,
-    )(keys, payload, splitters)
-    return SortResult(keys=sk, payload=sp, valid=sv, dropped=dropped)
+    df = Dataflow.source().sort(key=lambda r: r["key"], splitters=splitters,
+                                num_buckets=num_buckets,
+                                capacity_factor=capacity_factor)
+    ex = SPMDExecutor(mesh, axes=axes, plan=plan, use_pallas=use_pallas)
+    res = ex.run(df, {"key": keys.astype(jnp.int32),
+                      "payload": payload})
+    return SortResult(keys=res.records["key"], payload=res.records["payload"],
+                      valid=res.valid, dropped=res.dropped)
 
 
 def hadoop_style_sort(

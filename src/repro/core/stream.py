@@ -41,22 +41,30 @@ class SegmentInfo:
 class SphereStream:
     """A sharded record array plus its segment table.
 
-    ``data``: (num_records, ...) array (sharded or to-be-sharded).
+    ``data``: (num_records, ...) array (sharded or to-be-sharded) — or a
+    pytree of such arrays when the stream carries structured records.
     ``valid``: optional (num_records,) bool mask — Sphere outputs may be
     padded (capacity-bounded shuffles), and downstream UDFs must know which
     rows are real records.
+    ``codec``: optional :class:`repro.core.records.RecordCodec` describing
+    the record schema — the byte layout the same stream has when stored in
+    Sector, which is what lets :class:`repro.sphere.dataflow.HostExecutor`
+    and :class:`~repro.sphere.dataflow.SPMDExecutor` consume one source
+    definition.
     """
 
     data: jax.Array
     valid: Optional[jax.Array] = None
     segment_table: Optional[List[SegmentInfo]] = None
+    codec: Optional[object] = None  # RecordCodec (kept untyped: no cycle)
 
     @property
     def num_records(self) -> int:
-        return self.data.shape[0]
+        return jax.tree.leaves(self.data)[0].shape[0]
 
     def with_data(self, data: jax.Array, valid: Optional[jax.Array] = None
                   ) -> "SphereStream":
+        # codec intentionally not carried over: a UDF may change the schema
         return SphereStream(data=data, valid=valid,
                             segment_table=self.segment_table)
 
@@ -68,7 +76,9 @@ class SphereStream:
         valid = None
         if self.valid is not None:
             valid = jax.device_put(self.valid, NamedSharding(mesh, P(axis)))
-        return SphereStream(data=data, valid=valid, segment_table=self.segment_table)
+        return SphereStream(data=data, valid=valid,
+                            segment_table=self.segment_table,
+                            codec=self.codec)
 
     # -- segment bookkeeping ---------------------------------------------------
     @staticmethod

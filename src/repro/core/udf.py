@@ -6,12 +6,19 @@ paradigm. A device plays the SPE role; ``shard_map`` gives the UDF its local
 segment; the traced jaxpr plays the role of the ``.so`` UDF library the paper
 ships to each SPE.
 
+This is the low-level SPMD primitive **under** the unified dataflow layer:
+multi-stage programs (map -> shuffle -> reduce/sort) should be written as a
+:class:`repro.sphere.dataflow.Dataflow`, which runs unmodified on either the
+compiled SPMD executor or the host Sector/SPE executor. ``sphere_map``
+remains the direct escape hatch for one-shot segment UDFs with arbitrary
+(non-record) outputs.
+
 Supports the paper's extensions:
 - multiple input streams (``sphere_map(f, [a, b], ...)`` == ``f(A[], B[])``);
 - record-wise, group-wise or whole-segment UDFs (the UDF sees the entire
   local segment and may reduce/expand it);
 - bucket output via :func:`repro.core.shuffle.sphere_shuffle` composed inside
-  the UDF (see :mod:`repro.core.sort` for the canonical use).
+  the UDF (see :mod:`repro.sphere.dataflow` for the canonical use).
 """
 
 from __future__ import annotations
@@ -59,4 +66,12 @@ def sphere_map(
     )
     out = mapped(*[s.data for s in stream_list])
     template = stream_list[0]
-    return template.with_data(out)
+    # a record-wise UDF (leading dim preserved, same sharding) keeps the
+    # input's validity mask; any reshaping UDF invalidates it
+    valid = None
+    if out_axis == axis and template.valid is not None:
+        leaves = jax.tree.leaves(out)
+        if leaves and all(
+                l.ndim and l.shape[0] == template.num_records for l in leaves):
+            valid = template.valid
+    return template.with_data(out, valid)

@@ -14,8 +14,12 @@ from repro.sphere.scheduler import (
 )
 from repro.sphere.spe import SPE
 from repro.sphere.engine import SphereProcess
+from repro.sphere.dataflow import (
+    Dataflow, DataflowResult, HostExecutor, SPMDExecutor,
+)
 
 __all__ = [
     "SegmentScheduler", "SPEState", "SegmentState", "ScheduleEvent",
     "SPE", "SphereProcess",
+    "Dataflow", "DataflowResult", "HostExecutor", "SPMDExecutor",
 ]

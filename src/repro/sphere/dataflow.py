@@ -1,0 +1,509 @@
+"""Unified Sphere dataflow: one pipeline description, two executors.
+
+The paper's whole pitch is a *single* simple client API (§3.1):
+
+    SphereStream sdss;  sdss.init(<slices>);
+    SphereProcess myproc;  myproc.run(sdss, "myFunc");
+
+This module is that API for the repo. A :class:`Dataflow` is a declarative,
+executor-independent chain of stages over *records* (any fixed-shape pytree
+of arrays sharing a leading record axis, see
+:class:`repro.core.records.RecordCodec`):
+
+    df = (Dataflow.source(codec)
+          .map(extract)                      # record-wise UDF
+          .shuffle(by=hash_fn, num_buckets=B)  # paper §3.2 bucket shuffle
+          .reduce(aggregate))                # per-bucket-group UDF
+    # or:  Dataflow.source().sort(key=..., splitters=...)   # paper §4.2
+
+The same pipeline object runs on two executors with identical results:
+
+- :class:`SPMDExecutor` fuses every stage into ONE ``jit(shard_map(...))``
+  program: maps/reduces inline per device, shuffles become capacity-bounded
+  ``all_to_all`` via :class:`repro.core.shuffle.ShufflePlan` (flat or
+  two-level wide-area), sort uses the Pallas bitonic kernel. Compiled
+  programs are cached keyed on (pipeline, plan, input shapes/dtypes).
+- :class:`HostExecutor` lowers the same graph onto
+  :class:`repro.sphere.engine.SphereProcess` / SPEs over Sector-stored
+  files: maps run at the SPEs with locality scheduling and retry, shuffle
+  stages materialize **bucket files** back into Sector (the paper's bucket
+  handlers), and post-shuffle stages run as the next Sphere stage over
+  those buckets.
+
+UDF contracts (shared by both executors — write them once with
+``jax.numpy``; on the host path numpy arrays go in and the outputs are
+converted back):
+
+- ``map(fn)``: ``fn(records) -> records``. Record-wise / vectorized. On the
+  SPMD path padding rows may be present, so the function must be
+  padding-oblivious (pure row-wise transforms are). If the leading dimension
+  changes (static re-emission), validity resets to all-true; encode
+  "emit nothing" by keying the following ``shuffle`` with a negative bucket.
+- ``shuffle(by, ...)``: ``by(records) -> (n,) int`` bucket ids; negative or
+  out-of-range ids mean "emit nothing".
+- ``reduce(fn)``: ``fn(records, valid) -> (records, valid)`` or
+  ``(records, valid, dropped)`` — a whole-group UDF (the paper's "the SPE
+  processes the whole data segment"). The group is one device's received
+  records (SPMD) or one bucket file (host); per-key aggregations see every
+  record of a key either way, because the shuffle co-located them.
+- ``sort(key, splitters, ...)``: range-partition by ``key`` then sort each
+  partition locally — the two-stage terasort of §4.2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.records import RecordCodec
+from repro.core.shuffle import ShufflePlan
+from repro.kernels import ops as kops
+
+_KEY_MAX = np.iinfo(np.int32).max
+
+
+# -- pipeline description ----------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MapStage:
+    fn: Callable
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShuffleStage:
+    by: Callable
+    num_buckets: Optional[int] = None
+    capacity_factor: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ReduceStage:
+    fn: Callable
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SortStage:
+    key: Callable
+    splitters: Optional[Any] = None       # (num_buckets - 1,) int32 thresholds
+    num_buckets: Optional[int] = None
+    capacity_factor: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Dataflow:
+    """An immutable, chainable pipeline of stages (see module docstring).
+
+    ``codec`` is the *source* record schema. Executors that read raw bytes
+    (the host executor over Sector files) require it; the SPMD executor
+    infers schemas from the arrays it is handed, so it is optional there.
+    """
+
+    stages: Tuple[Any, ...] = ()
+    codec: Optional[RecordCodec] = None
+
+    @classmethod
+    def source(cls, codec: Optional[RecordCodec] = None) -> "Dataflow":
+        return cls(stages=(), codec=codec)
+
+    def _with(self, stage) -> "Dataflow":
+        return Dataflow(stages=self.stages + (stage,), codec=self.codec)
+
+    def map(self, fn: Callable) -> "Dataflow":
+        return self._with(MapStage(fn))
+
+    def shuffle(self, by: Callable, num_buckets: Optional[int] = None,
+                capacity_factor: float = 4.0) -> "Dataflow":
+        return self._with(ShuffleStage(by, num_buckets, capacity_factor))
+
+    def reduce(self, fn: Callable) -> "Dataflow":
+        return self._with(ReduceStage(fn))
+
+    def sort(self, key: Callable, splitters: Optional[Any] = None,
+             num_buckets: Optional[int] = None,
+             capacity_factor: float = 2.0) -> "Dataflow":
+        return self._with(SortStage(key, splitters, num_buckets,
+                                    capacity_factor))
+
+    def describe(self) -> str:
+        parts = ["source"]
+        for st in self.stages:
+            if isinstance(st, MapStage):
+                parts.append(f"map[{getattr(st.fn, '__name__', '<fn>')}]")
+            elif isinstance(st, ShuffleStage):
+                parts.append(f"shuffle[{st.num_buckets or 'auto'}]")
+            elif isinstance(st, ReduceStage):
+                parts.append(f"reduce[{getattr(st.fn, '__name__', '<fn>')}]")
+            elif isinstance(st, SortStage):
+                parts.append(f"sort[{st.num_buckets or 'auto'}]")
+        return " |> ".join(parts)
+
+
+@dataclasses.dataclass
+class DataflowResult:
+    """Executor-independent result.
+
+    records: output pytree. SPMD: padded, globally sharded arrays — mask
+             with ``valid``. Host: dense numpy arrays, ``valid`` all-true.
+    dropped: records lost to capacity bounds (SPMD shuffles) plus drops
+             reported by reduce UDFs, summed over the whole run.
+    errors/retries: host-executor fault accounting (empty/0 on SPMD).
+    """
+
+    records: Any
+    valid: Any
+    dropped: Any
+    errors: Dict[Any, str] = dataclasses.field(default_factory=dict)
+    retries: int = 0
+
+    def valid_records(self) -> Any:
+        """Dense numpy view: only real records, in device/bucket order."""
+        v = np.asarray(self.valid)
+        return jax.tree.map(lambda a: np.asarray(a)[v], self.records)
+
+
+def _split_reduce_out(out):
+    if not isinstance(out, tuple) or len(out) not in (2, 3):
+        raise ValueError("reduce UDF must return (records, valid) or "
+                         "(records, valid, dropped)")
+    records, valid = out[0], out[1]
+    dropped = out[2] if len(out) == 3 else None
+    return records, valid, dropped
+
+
+def _leading(records) -> int:
+    return jax.tree.leaves(records)[0].shape[0]
+
+
+# -- SPMD executor -----------------------------------------------------------
+
+
+class SPMDExecutor:
+    """Runs a :class:`Dataflow` as one compiled SPMD program.
+
+    All stages fuse into a single ``jit(shard_map(...))``: per-device UDFs
+    inline, shuffles as capacity-bounded collectives over ``axes`` (one axis
+    = flat ``all_to_all``; a ``(dc, node)`` pair or a hierarchical ``plan`` =
+    the two-level wide-area path). Compiled programs are cached on
+    (pipeline identity, plan, input shapes/dtypes), so re-running the same
+    pipeline object on same-shaped data costs zero retracing.
+    """
+
+    def __init__(self, mesh: Mesh, axes: Sequence[str] = ("data",),
+                 plan: Optional[ShufflePlan] = None,
+                 use_pallas: bool = False):
+        self.mesh = mesh
+        self.plan = plan
+        self.axes = tuple(plan.axes) if plan is not None else tuple(
+            (axes,) if isinstance(axes, str) else axes)
+        self.use_pallas = use_pallas
+        self._cache: Dict[Any, Tuple[Dataflow, Callable]] = {}
+
+    @property
+    def axis_size(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.axes)
+
+    def run(self, pipeline: Dataflow, records: Any,
+            valid: Optional[Any] = None) -> DataflowResult:
+        """Execute ``pipeline`` over ``records`` sharded along ``axes``.
+
+        ``records``: pytree of global arrays (or a
+        :class:`repro.core.stream.SphereStream`, whose ``valid`` is used).
+        """
+        from repro.core.stream import SphereStream
+        if isinstance(records, SphereStream):
+            valid = records.valid if valid is None else valid
+            records = records.data
+        records = jax.tree.map(jnp.asarray, records)
+        n = _leading(records)
+        if valid is None:
+            valid = jnp.ones((n,), jnp.bool_)
+        leaves = jax.tree.leaves(records)
+        key = (id(pipeline), self.plan,
+               jax.tree.structure(records),
+               tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+        entry = self._cache.get(key)
+        if entry is None:
+            fn = self._lower(pipeline)
+            # keep a strong ref to the pipeline so its id() stays unique
+            self._cache[key] = entry = (pipeline, fn)
+        out_records, out_valid, dropped = entry[1](records, valid)
+        return DataflowResult(records=out_records, valid=out_valid,
+                              dropped=dropped)
+
+    # -- lowering -------------------------------------------------------------
+    def _lower(self, df: Dataflow) -> Callable:
+        spec = P(self.axes[0]) if len(self.axes) == 1 else P(self.axes)
+        axes = self.axes
+
+        def local(records, valid):
+            valid = valid.reshape(-1)
+            dropped = jnp.zeros((), jnp.int32)
+            for stage in df.stages:
+                if isinstance(stage, MapStage):
+                    records = stage.fn(records)
+                    if _leading(records) != valid.shape[0]:
+                        valid = jnp.ones((_leading(records),), jnp.bool_)
+                elif isinstance(stage, ReduceStage):
+                    records, valid, rd = _split_reduce_out(
+                        stage.fn(records, valid))
+                    valid = valid.reshape(-1)
+                    if rd is not None:
+                        dropped += jax.lax.psum(
+                            jnp.asarray(rd, jnp.int32), axes)
+                elif isinstance(stage, ShuffleStage):
+                    ids = jnp.asarray(stage.by(records)).reshape(-1)
+                    records, valid, d = self._exchange(
+                        records, valid, ids, stage.num_buckets,
+                        stage.capacity_factor)
+                    dropped += d
+                elif isinstance(stage, SortStage):
+                    records, valid, d = self._sort(records, valid, stage)
+                    dropped += d
+                else:
+                    raise TypeError(f"unknown stage {stage!r}")
+            return records, valid, dropped
+
+        mapped = shard_map(local, mesh=self.mesh, in_specs=(spec, spec),
+                           out_specs=(spec, spec, P()), check_vma=False)
+        return jax.jit(mapped)
+
+    def _stage_plan(self, num_buckets: Optional[int], n_local: int,
+                    capacity_factor: float) -> ShufflePlan:
+        if self.plan is not None:
+            if num_buckets not in (None, self.plan.num_buckets):
+                raise ValueError(
+                    f"stage wants {num_buckets} buckets but the executor "
+                    f"plan has {self.plan.num_buckets}")
+            return self.plan
+        nb = num_buckets or self.axis_size
+        return ShufflePlan.for_mesh(self.mesh, nb, n_local, capacity_factor,
+                                    self.axes, use_pallas=self.use_pallas)
+
+    def _exchange(self, records, valid, ids, num_buckets, capacity_factor):
+        """One bucket shuffle: pack -> plan.shuffle -> unpack."""
+        codec = RecordCodec.from_example(records)
+        packed = codec.pack(records)
+        plan = self._stage_plan(num_buckets, packed.shape[0], capacity_factor)
+        res = plan.shuffle(packed, ids.astype(jnp.int32), valid=valid)
+        flat = res.data.reshape(-1, codec.nbytes)
+        return codec.unpack(flat), res.valid.reshape(-1), res.dropped
+
+    def _sort(self, records, valid, stage: SortStage):
+        """Range-partition shuffle (stage 1) + local segment sort (stage 2,
+        Pallas bitonic kernel when ``use_pallas``) — paper §4.2 / Fig 3."""
+        nb = (self.plan.num_buckets if self.plan is not None
+              else stage.num_buckets or self.axis_size)
+        if stage.splitters is not None:
+            spl = jnp.asarray(stage.splitters)
+            if spl.shape[0] != nb - 1:
+                raise ValueError(f"{spl.shape[0]} splitters for {nb} buckets")
+        else:
+            spl = jnp.linspace(0, _KEY_MAX, nb + 1)[1:-1].astype(jnp.int32)
+        keys = jnp.asarray(stage.key(records)).astype(jnp.int32).reshape(-1)
+        bucket = jnp.searchsorted(spl, keys, side="right").astype(jnp.int32)
+        records, valid, dropped = self._exchange(
+            records, valid, bucket, nb, stage.capacity_factor)
+        # stage 2: invalid rows sink (key forced to KEY_MAX), so the valid
+        # prefix is the first sum(valid) rows. Requires real keys < KEY_MAX.
+        keys = jnp.asarray(stage.key(records)).astype(jnp.int32).reshape(-1)
+        skey = jnp.where(valid, keys, _KEY_MAX)
+        nv = jnp.sum(valid.astype(jnp.int32))
+        if self.use_pallas:
+            rows = jnp.arange(skey.shape[0], dtype=jnp.int32)
+            _, srows = kops.sort_kv_segments(skey[None, :], rows[None, :])
+            order = srows[0]
+        else:
+            order = jnp.argsort(skey, stable=True)
+        records = jax.tree.map(lambda a: jnp.take(a, order, axis=0), records)
+        valid = jnp.arange(skey.shape[0], dtype=jnp.int32) < nv
+        return records, valid, dropped
+
+
+# -- host (Sector/SPE) executor ----------------------------------------------
+
+
+class _Phase:
+    """Consecutive record-wise stages, optionally ended by a shuffle/sort."""
+
+    def __init__(self, stages: List[Any], terminator: Optional[Any]):
+        self.stages = stages
+        self.terminator = terminator
+
+
+def _phases(df: Dataflow) -> List[_Phase]:
+    out, cur = [], []
+    for st in df.stages:
+        if isinstance(st, (ShuffleStage, SortStage)):
+            out.append(_Phase(cur, st))
+            cur = []
+        else:
+            cur.append(st)
+    out.append(_Phase(cur, None))
+    return out
+
+
+def _np_records(records) -> Any:
+    return jax.tree.map(np.asarray, records)
+
+
+_scratch_counter = itertools.count()
+
+
+class HostExecutor:
+    """Runs a :class:`Dataflow` on the Sector/SPE data plane.
+
+    The pipeline splits into phases at shuffle/sort boundaries. Each phase is
+    one :class:`repro.sphere.engine.SphereProcess` stage: SPEs decode Sector
+    segments through the source codec, run the phase's UDFs, and route the
+    (re-encoded) outputs either back to the client or into **bucket files**
+    (the paper's §3.2 "bucket writers"), which are uploaded to Sector and
+    become the next phase's input stream. Locality scheduling, SPE failure
+    retry, and data-error reporting all come from the engine; validity masks
+    never appear on this path because host buckets are variable-size (no
+    capacity bound -> nothing is dropped by shuffles here).
+    """
+
+    def __init__(self, master, client, spes: Sequence[Any],
+                 max_retries: int = 2, scratch_prefix: str = "/.dataflow"):
+        self.master = master
+        self.client = client
+        self.spes = list(spes)
+        self.max_retries = max_retries
+        self.scratch_prefix = scratch_prefix
+
+    def run(self, pipeline: Dataflow, file_paths: Sequence[str],
+            ) -> DataflowResult:
+        """Execute ``pipeline`` over Sector files. ``pipeline.codec`` is
+        required: it decodes the source records (record_bytes =
+        ``codec.nbytes``)."""
+        from repro.sphere.engine import SphereProcess
+
+        if pipeline.codec is None:
+            raise ValueError("HostExecutor needs Dataflow.source(codec=...) "
+                             "to decode Sector records")
+        codec = pipeline.codec
+        paths = list(file_paths)
+        scratch = f"{self.scratch_prefix}/run{next(_scratch_counter)}"
+        errors: Dict[Any, str] = {}
+        retries = 0
+        dropped = 0
+        pending_sort: Optional[SortStage] = None
+
+        phases = _phases(pipeline)
+        for pi, phase in enumerate(phases):
+            proc = SphereProcess(self.master, self.client.session_id,
+                                 self.spes, max_retries=self.max_retries)
+            holder: Dict[str, Any] = {"codec": None, "dropped": 0}
+            udf = self._phase_udf(phase, pending_sort, holder)
+            term = phase.terminator
+            nb = self._num_buckets(term)
+            if term is not None:
+                def bucket_fn(out):
+                    packed, ids = out
+                    return {b: packed[ids == b] for b in range(nb)}
+            else:
+                bucket_fn, nb = None, 0
+            # after a shuffle, a bucket file must stay one segment (one
+            # reduce group) — force whole-file segmentation
+            seg_kw = ({} if pi == 0 else
+                      {"s_min": 1 << 40, "s_max": 1 << 40})
+            res = proc.run(paths, udf, record_bytes=codec.nbytes,
+                           codec=codec, bucket_fn=bucket_fn,
+                           num_buckets=nb, **seg_kw)
+            retries += res.retries
+            dropped += holder["dropped"]
+            errors.update({(pi, k): v for k, v in res.errors.items()})
+            out_codec = holder["codec"] or codec
+
+            if term is None:
+                parts = [res.outputs[i] for i in sorted(res.outputs)]
+                packed = (np.concatenate(parts, axis=0) if parts
+                          else np.zeros((0, out_codec.nbytes), np.uint8))
+                records = out_codec.decode(packed)
+                return DataflowResult(
+                    records=records,
+                    valid=np.ones((_leading(records),), bool),
+                    dropped=dropped, errors=errors, retries=retries)
+
+            # materialize bucket files as the next phase's input stream
+            prefix = f"{scratch}/s{pi}"
+            self.client.upload_dataset(
+                prefix, [np.ascontiguousarray(res.outputs[b]).tobytes()
+                         for b in range(nb)])
+            paths = [f"{prefix}.{b:05d}" for b in range(nb)]
+            codec = out_codec
+            pending_sort = term if isinstance(term, SortStage) else None
+        raise AssertionError("unreachable: final phase returns")
+
+    # -- phase lowering -------------------------------------------------------
+    def _num_buckets(self, term) -> int:
+        if term is None:
+            return 0
+        if term.num_buckets is not None:
+            return term.num_buckets
+        if isinstance(term, SortStage) and term.splitters is not None:
+            return int(np.asarray(term.splitters).shape[0]) + 1
+        return len(self.spes)
+
+    def _phase_udf(self, phase: _Phase, pending_sort: Optional[SortStage],
+                   holder: Dict[str, Any]) -> Callable:
+        """Build the (decoded records) -> packed bytes UDF one SPE runs.
+
+        The output record schema is only known once a segment has been
+        processed; it is stashed in ``holder`` so the executor can decode the
+        bucket files / final outputs (every segment must agree)."""
+        term = phase.terminator
+        nb = self._num_buckets(term)
+
+        def udf(records):
+            records = _np_records(records)
+            if pending_sort is not None:
+                # stage 2 of a sort: this segment IS one range partition
+                key = np.asarray(pending_sort.key(records))
+                order = np.argsort(key, kind="stable")
+                records = jax.tree.map(lambda a: a[order], records)
+            valid = np.ones((_leading(records),), bool)
+            for stage in phase.stages:
+                if isinstance(stage, MapStage):
+                    records = _np_records(stage.fn(records))
+                    if _leading(records) != valid.shape[0]:
+                        valid = np.ones((_leading(records),), bool)
+                elif isinstance(stage, ReduceStage):
+                    records, valid, rd = _split_reduce_out(
+                        stage.fn(records, valid))
+                    records = _np_records(records)
+                    valid = np.asarray(valid).reshape(-1)
+                    if rd is not None:
+                        holder["dropped"] += int(rd)
+                else:
+                    raise TypeError(f"unexpected mid-phase stage {stage!r}")
+            records = jax.tree.map(lambda a: a[valid], records)
+            codec = RecordCodec.from_example(records)
+            if holder["codec"] is None:
+                holder["codec"] = codec
+            elif holder["codec"] != codec:
+                raise ValueError("UDF output schema differs across segments: "
+                                 f"{holder['codec']} vs {codec}")
+            packed = codec.encode(records)
+            if term is None:
+                return packed
+            if isinstance(term, SortStage):
+                keys = np.asarray(term.key(records)).astype(np.int32)
+                spl = (np.asarray(term.splitters) if term.splitters is not None
+                       else np.linspace(0, _KEY_MAX, nb + 1)[1:-1]
+                       .astype(np.int32))
+                ids = np.searchsorted(spl, keys, side="right")
+            else:
+                ids = np.asarray(term.by(records)).reshape(-1)
+            return packed, ids.astype(np.int64)
+
+        return udf

@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.records import RecordCodec
 from repro.core.stream import SegmentInfo, SphereStream
 from repro.sector.master import Master
 from repro.sector.topology import NodeAddress
@@ -72,11 +73,22 @@ class SphereProcess:
         record_bytes: int,
         bucket_fn: Optional[Callable[[Any], Dict[int, Any]]] = None,
         num_buckets: int = 0,
+        codec: Optional[RecordCodec] = None,
+        s_min: int = 1,
+        s_max: int = 1 << 30,
     ) -> SphereResult:
         """Execute ``udf`` over every segment; optionally route outputs to
         buckets (``bucket_fn`` maps a UDF output to {bucket_id: records}),
-        which become the input stream of the next stage."""
-        segments = self.segment_stream(file_paths, record_bytes)
+        which become the input stream of the next stage.
+
+        ``codec``: when given, SPEs decode each raw ``(n, record_bytes)``
+        byte segment into a structured record pytree before calling ``udf``
+        (the paper ships the UDF library *to* the SPE; the record schema
+        rides along). ``s_min``/``s_max`` are the §3.5.1 segment-size clamp
+        in bytes — pass a huge ``s_min`` to force whole-file segments (one
+        bucket file = one reduce group for the dataflow host executor)."""
+        segments = self.segment_stream(file_paths, record_bytes,
+                                       s_min=s_min, s_max=s_max)
         outputs: Dict[int, Any] = {}
         errors: Dict[int, str] = {}
         buckets: Dict[int, List[Any]] = {b: [] for b in range(num_buckets)}
@@ -101,10 +113,15 @@ class SphereProcess:
                 from repro.sector.topology import distance
                 d = min((distance(spe.address, a) for a in locs), default=3)
                 return (d, spe.segments_done, spe.spe_id)
-            spe = min(live, key=loc_key) if locs else live[rr % len(live)]
-            rr += 1
+            if locs:
+                spe = min(live, key=loc_key)
+            else:
+                # round-robin only advances when it actually picked — a
+                # locality hit must not burn an rr slot for other segments
+                spe = live[rr % len(live)]
+                rr += 1
             try:
-                out = spe.process(seg, udf, record_bytes)
+                out = spe.process(seg, udf, record_bytes, codec=codec)
             except (IOError, OSError) as e:           # SPE/node failure
                 live = [s for s in live if s is not spe]
                 attempt[seg_i] += 1
@@ -131,8 +148,16 @@ class SphereProcess:
 
         result = SphereResult(outputs=outputs, errors=errors, retries=retries)
         if bucket_fn is not None:
+            # an empty bucket must keep the records' dtype and trailing dims
+            # (np.zeros((0,)) would silently decay to 1-D float64)
+            exemplar = next((recs[0] for recs in buckets.values() if recs),
+                            None)
+            def empty() -> np.ndarray:
+                if exemplar is None:
+                    return np.zeros((0,))
+                return np.zeros((0,) + exemplar.shape[1:], exemplar.dtype)
             result.outputs = {
-                b: (np.concatenate(v, axis=0) if v else np.zeros((0,)))
+                b: (np.concatenate(v, axis=0) if v else empty())
                 for b, v in buckets.items()
             }
         return result

@@ -21,6 +21,7 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro.core.records import RecordCodec
 from repro.core.stream import SegmentInfo
 from repro.sector.master import Master
 from repro.sector.topology import NodeAddress
@@ -47,11 +48,18 @@ class SPE:
             seg.num_records, record_bytes)
 
     def process(self, seg: SegmentInfo, udf: Callable[[np.ndarray], Any],
-                record_bytes: int) -> Any:
-        """Steps 1-4 for one segment."""
+                record_bytes: int,
+                codec: Optional[RecordCodec] = None) -> Any:
+        """Steps 1-4 for one segment.
+
+        With a ``codec`` the SPE decodes the raw bytes into the structured
+        record pytree before invoking the UDF — the schema travels with the
+        shipped UDF, mirroring the paper's ``.idx``-indexed record files."""
         if self.fail_after is not None and self.segments_done >= self.fail_after:
             raise IOError(f"SPE {self.spe_id} crashed")
         records = self.read_segment(seg, record_bytes)
+        if codec is not None:
+            records = codec.decode(records)
         result = udf(records)
         self.segments_done += 1
         return result

@@ -39,13 +39,14 @@ def test_reduce_by_key_sum_matches_counter(pairs):
     keys = jnp.asarray([k for k, _ in pairs], jnp.int32)
     vals = jnp.asarray([v for _, v in pairs], jnp.int32)
     valid = jnp.ones((len(pairs),), bool)
-    out_k, out_v = reduce_by_key_sum(keys, vals, valid)
+    out_k, out_v, dropped = reduce_by_key_sum(keys, vals, valid)
     got = {int(k): int(v) for k, v in zip(np.asarray(out_k),
                                           np.asarray(out_v)) if k >= 0}
     want = {}
     for k, v in pairs:
         want[k] = want.get(k, 0) + v
     assert got == want
+    assert int(dropped) == 0  # cap defaults to the input size: no truncation
 
 
 @settings(max_examples=20, deadline=None)
