@@ -1,15 +1,36 @@
-"""Pallas kernel microbenchmarks vs the jnp oracles.
+"""Pallas kernel microbenchmarks vs the jnp oracles — and vs the retired
+argsort send path.
 
-On this CPU container the Pallas kernels run in interpret mode, so absolute
-times measure the *oracle-equivalent semantics*, not TPU performance; the
-derived column reports elements/s and the oracle ratio. On a real TPU set
-REPRO_PALLAS_INTERPRET=0.
+On this CPU container the Pallas kernels run in interpret mode, so the
+``*_pallas_interp`` rows measure *oracle-equivalent semantics* plus
+interpreter overhead, not TPU performance; the jnp rows (the fused O(n)
+send path the shuffles run with ``use_pallas=False``, and the XLA oracles)
+are real compiled-CPU numbers. On a real TPU set REPRO_PALLAS_INTERPRET=0.
+
+Cases:
+
+- ``bucket_hist``       — MXU one-hot histogram vs jnp one-hot oracle.
+- ``partition_pack``    — the ISSUE-4 headline: the fused O(n) partition/
+                          pack send path vs the stable-argsort + histogram
+                          + gather layout it replaced, on the 2^16-record
+                          shuffle send microbenchmark.
+- ``bitonic_sort``      — multi-segment bitonic kernel vs XLA row sort.
+- ``segmented_sort``    — stage-2 economics: sorting bpd bucket-major
+                          segments of R/bpd vs one R-row segment
+                          (O(R log² (R/bpd)) vs O(R log² R)).
+
+``--json PATH`` additionally writes the machine-readable
+``BENCH_kernels.json`` (the first point of the perf trajectory; CI runs
+this as a smoke step and ``--check`` asserts the fused partition path beats
+the argsort layout).
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -28,30 +49,133 @@ def _time(fn, *args, iters=5) -> float:
     return (time.time() - t0) / iters
 
 
-def run(csv: bool = True) -> List[str]:
-    rng = np.random.default_rng(0)
-    lines = []
+def _argsort_send_layout(num_dest: int, capacity: int):
+    """The pre-ISSUE-4 send path (stable argsort + bincount + gather),
+    preserved here as the baseline the fused path must beat."""
 
+    @jax.jit
+    def layout(dest, col):
+        n = dest.shape[0]
+        order = jnp.argsort(dest, stable=True)
+        counts = jnp.bincount(dest, length=num_dest)
+        offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                   jnp.cumsum(counts)[:-1]])
+        cap_iota = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+        src = jnp.clip(offsets[:, None] + cap_iota, 0, n - 1).reshape(-1)
+        origin = jnp.take(order.astype(jnp.int32), src)
+        tile = jnp.take(col, origin, axis=0).reshape(
+            (num_dest, capacity) + col.shape[1:])
+        return tile, cap_iota < counts[:, None]
+
+    return layout
+
+
+def run(csv: bool = True, json_path: str | None = None) -> List[str]:
+    rng = np.random.default_rng(0)
+    lines: List[str] = []
+    results: Dict[str, Dict[str, float]] = {}
+
+    def record(name: str, t: float, elems: int, extra: str = ""):
+        results[name] = {"us_per_call": t * 1e6,
+                         "melem_per_s": elems / t / 1e6}
+        lines.append(f"kernel_{name},{t * 1e6:.1f},"
+                     f"{elems / t / 1e6:.2f}Melem/s{extra}")
+
+    # -- bucket histogram -----------------------------------------------------
     n, buckets = 1 << 16, 256
     ids = jnp.asarray(rng.integers(0, buckets, size=n).astype(np.int32))
-    t_k = _time(lambda x: ops.bucket_histogram(x, buckets), ids)
-    t_r = _time(lambda x: ref.bucket_histogram_ref(x, buckets), ids)
-    lines.append(f"kernel_bucket_hist_{n},{t_k * 1e6:.1f},"
-                 f"{n / t_k / 1e6:.1f}Melem/s oracle={t_r * 1e6:.1f}us")
+    record("bucket_hist_pallas_interp",
+           _time(lambda x: ops.bucket_histogram(x, buckets), ids), n)
+    record("bucket_hist_oracle",
+           _time(lambda x: ref.bucket_histogram_ref(x, buckets), ids), n)
 
-    rows, cols = 4, 4096
+    # -- fused partition/pack vs the argsort send path ------------------------
+    n, num_dest = 1 << 16, 8
+    capacity = 2 * n // num_dest
+    dest = jnp.asarray(rng.integers(0, num_dest, size=n).astype(np.int32))
+    data = jnp.asarray(rng.integers(0, 1 << 30, size=(n, 4)).astype(np.int32))
+    baseline = _argsort_send_layout(num_dest, capacity)
+    fused = jax.jit(lambda d, x: ops.partition_pack(
+        [x], d, num_dest, capacity, use_pallas=False))
+    fused_k = jax.jit(lambda d, x: ops.partition_pack(
+        [x], d, num_dest, capacity, use_pallas=True))
+    t_arg = _time(baseline, dest, data)
+    t_fused = _time(fused, dest, data)
+    t_fused_k = _time(fused_k, dest, data)
+    record("partition_argsort_baseline", t_arg, n)
+    record("partition_pack_fused", t_fused, n,
+           extra=f" speedup_vs_argsort={t_arg / t_fused:.2f}x")
+    record("partition_pack_pallas_interp", t_fused_k, n)
+    results["partition_speedup_vs_argsort"] = {
+        "ratio": t_arg / t_fused, "n": n, "num_dest": num_dest}
+
+    # -- bitonic sort (multi-segment blocks) ----------------------------------
+    rows, cols = 8, 4096
     keys = jnp.asarray(rng.integers(0, 1 << 30,
                                     size=(rows, cols)).astype(np.int32))
     vals = jnp.asarray(np.arange(rows * cols,
                                  dtype=np.int32).reshape(rows, cols))
-    t_k = _time(ops.sort_kv_segments, keys, vals)
-    t_r = _time(ref.sort_kv_segments_ref, keys, vals)
-    lines.append(f"kernel_bitonic_sort_{rows}x{cols},{t_k * 1e6:.1f},"
-                 f"{rows * cols / t_k / 1e6:.2f}Melem/s "
-                 f"oracle={t_r * 1e6:.1f}us")
+    record("bitonic_sort_8x4096_pallas_interp",
+           _time(ops.sort_kv_segments, keys, vals), rows * cols)
+    record("bitonic_sort_8x4096_oracle",
+           _time(ref.sort_kv_segments_ref, keys, vals), rows * cols)
+
+    # -- segmented stage-2 sort: bpd segments of R/bpd vs one of R ------------
+    r, bpd = 1 << 16, 16
+    flat = jnp.asarray(rng.integers(0, 1 << 30, size=r).astype(np.int32))
+    seg = flat.reshape(bpd, r // bpd)
+    t_seg = _time(ops.sort_segments, seg)
+    t_one = _time(ops.sort_segments, flat.reshape(1, r))
+    record("segmented_sort_16x4096_pallas_interp", t_seg, r,
+           extra=f" speedup_vs_single_segment={t_one / t_seg:.2f}x")
+    record("segmented_sort_1x65536_pallas_interp", t_one, r)
+    record("segmented_sort_16x4096_oracle",
+           _time(lambda x: ref.sort_segments_ref(x), seg), r)
+    results["segmented_speedup_vs_single"] = {
+        "ratio": t_one / t_seg, "r": r, "bpd": bpd}
+
+    if json_path:
+        from repro.kernels.ops import _interpret_default
+        payload = {
+            "schema": "repro.kernel_bench.v1",
+            "backend": jax.default_backend(),
+            "pallas_interpret": _interpret_default(),
+            "note": ("CPU container: Pallas rows run in interpret mode; "
+                     "jnp/XLA rows are compiled. The trajectory point is "
+                     "partition_speedup_vs_argsort (fused O(n) send path "
+                     "vs the retired stable-argsort layout)."),
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        lines.append(f"kernel_bench_json,0,written {json_path}")
     return lines
 
 
-if __name__ == "__main__":
-    for line in run():
+def main() -> None:
+    args = sys.argv[1:]
+    json_path = None
+    check = "--check" in args
+    if "--json" in args:
+        idx = args.index("--json") + 1
+        if idx >= len(args):
+            print("usage: kernel_bench.py [--json PATH] [--check]")
+            sys.exit(2)
+        json_path = args[idx]
+    elif check:
+        json_path = "BENCH_kernels.json"
+    for line in run(json_path=json_path):
         print(line)
+    if check:
+        with open(json_path) as f:
+            payload = json.load(f)
+        ratio = payload["results"]["partition_speedup_vs_argsort"]["ratio"]
+        if ratio <= 1.0:
+            print(f"CHECK FAILED: fused partition path is not beating the "
+                  f"argsort layout (speedup {ratio:.2f}x)")
+            sys.exit(1)
+        print(f"CHECK OK: fused partition path {ratio:.2f}x vs argsort")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.kernels import ops as kops
+
 
 def default_hash(keys: jax.Array, num_buckets: int) -> jax.Array:
     """Multiplicative hash -> bucket id (the paper's simple first-letter
@@ -91,9 +93,15 @@ def map_reduce(
 
 
 def reduce_by_key_sum(keys: jax.Array, values: jax.Array, valid: jax.Array,
-                      max_unique: Optional[int] = None):
+                      max_unique: Optional[int] = None,
+                      use_pallas: bool = False):
     """Built-in Reduce UDF: sum values per key (wordcount/inverted-index
-    aggregation). Sorts by key, then segment-sums runs of equal keys.
+    aggregation). Groups by key — a single-segment run of the same
+    sort machinery the stage-2 segmented sort uses
+    (:func:`repro.kernels.ops.sort_kv_segments`: the Pallas bitonic kernel
+    when ``use_pallas``, else the stable-argsort oracle) — then
+    segment-sums runs of equal keys. Summation is order-insensitive, so the
+    bitonic network's instability within a run does not change results.
 
     Returns (unique_keys, sums, dropped) with key=-1 padding rows up to the
     input size (or ``max_unique``). ``dropped`` counts the distinct keys that
@@ -105,8 +113,10 @@ def reduce_by_key_sum(keys: jax.Array, values: jax.Array, valid: jax.Array,
     cap = max_unique or n
     sentinel = jnp.iinfo(jnp.int32).max
     skey = jnp.where(valid, keys, sentinel)
-    order = jnp.argsort(skey, stable=True)
-    sk = jnp.take(skey, order)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    sk_row, order_row = kops.sort_kv_segments(skey[None, :], pos[None, :],
+                                              use_pallas=use_pallas)
+    sk, order = sk_row[0], order_row[0]
     sv = jnp.take(jnp.where(valid, values, jnp.zeros_like(values)), order)
     is_head = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
     seg_id = jnp.cumsum(is_head.astype(jnp.int32)) - 1        # run index per row

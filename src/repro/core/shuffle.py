@@ -9,11 +9,14 @@ TPU adaptation: a per-element network send does not exist; the SPMD-native
 form is a **capacity-bounded all_to_all**. Buckets are assigned contiguously
 to devices along a mesh axis; each device
 
-1. computes its per-destination histogram (the Pallas ``bucket_hist`` kernel
-   or its jnp oracle),
-2. stable-sorts records by destination — after which each destination's
-   records are *contiguous*, so the send buffer is built with a **gather**
-   (TPU-friendly) instead of a scatter,
+1. runs the fused O(n) partition pass
+   (:func:`repro.kernels.ops.partition_pack`): per-destination histogram +
+   stable counting rank in ONE sweep over the destination vector (the
+   Pallas ``partition`` kernel or its jnp oracle) — no sort anywhere on the
+   send path (the historical implementation paid a full stable sort over
+   every local record per send),
+2. packs each destination's records into its send tile with the resulting
+   slot map — a **gather** (TPU-friendly) driven by the ranks,
 3. exchanges fixed-size (devices, capacity, ...) tiles with
    ``jax.lax.all_to_all``.
 
@@ -42,9 +45,10 @@ sparse tiles per destination DC. :func:`hierarchical_shuffle` instead runs
            on its owner's node-row, so arrival *is* delivery (consumers do
            the same local regroup-by-bucket they do after a flat shuffle).
 
-Both paths share the histogram / stable-sort / gather / capacity machinery
-(:func:`_build_send`) and are selected via :class:`ShufflePlan`, which is
-built from a mesh or a :class:`repro.sector.topology.Topology`.
+Both paths share the fused partition/pack/capacity machinery
+(:func:`repro.kernels.ops.partition_pack`) and are selected via
+:class:`ShufflePlan`, which is built from a mesh or a
+:class:`repro.sector.topology.Topology`.
 
 All shuffle functions here run **inside** ``shard_map`` and communicate via
 ``axis_name`` collectives.
@@ -100,61 +104,6 @@ class HierShuffleResult(ShuffleResult):
     b_pos: jax.Array = None     # (dcs, cap_b) row into stage-A recv layout
 
 
-def _per_dest_layout(dest: jax.Array, num_dest: int, use_pallas: bool = False):
-    """Stable-sort local records by destination; return (order, counts,
-    offsets) so that destination d's records sit at
-    order[offsets[d] : offsets[d] + counts[d]].
-
-    The histogram is the Pallas ``bucket_hist`` kernel when requested, else
-    an O(n) bincount (both drop ids outside [0, num_dest) — the overflow
-    destination)."""
-    order = jnp.argsort(dest, stable=True)
-    if use_pallas:
-        counts = kops.bucket_histogram(dest, num_dest, use_pallas=True)
-    else:
-        counts = jnp.bincount(dest, length=num_dest)
-    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
-                               jnp.cumsum(counts)[:-1]])
-    return order, counts, offsets
-
-
-def _build_send(
-    columns: Sequence[jax.Array],
-    dest: jax.Array,
-    num_dest: int,
-    capacity: int,
-    use_pallas: bool = False,
-):
-    """Shared send-buffer machinery for every shuffle path.
-
-    Lays the local records out contiguously per destination (histogram +
-    stable sort) and gathers fixed-size (num_dest, capacity, ...) tiles for
-    each column. Rows with ``dest`` outside [0, num_dest) are never sent
-    (callers use ``num_dest`` as the virtual overflow destination).
-
-    Returns (tiles, in_range, origin, dropped_local):
-      tiles[i]:  (num_dest, capacity, *columns[i].shape[1:])
-      in_range:  (num_dest, capacity) bool — slot holds a real record
-      origin:    (num_dest, capacity) int32 — source row of each slot
-                 (meaningful only where ``in_range``)
-      dropped_local: () int32 — records beyond capacity, this device only.
-    """
-    n = dest.shape[0]
-    order, counts, offsets = _per_dest_layout(dest, num_dest, use_pallas)
-    cap_iota = jnp.arange(capacity, dtype=jnp.int32)[None, :]           # (1, C)
-    src_rows = offsets[:, None] + cap_iota                              # (D, C)
-    in_range = cap_iota < counts[:, None]                               # (D, C)
-    src_rows = jnp.clip(src_rows, 0, n - 1).reshape(-1)
-    origin_flat = jnp.take(order.astype(jnp.int32), src_rows)
-    tiles = []
-    for col in columns:
-        t = jnp.take(col, origin_flat, axis=0)
-        tiles.append(t.reshape((num_dest, capacity) + col.shape[1:]))
-    origin = origin_flat.reshape(num_dest, capacity)
-    dropped_local = jnp.sum(jnp.maximum(counts - capacity, 0))
-    return tiles, in_range, origin, dropped_local
-
-
 def _a2a(x: jax.Array, axis_name: str) -> jax.Array:
     return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
                               tiled=True)
@@ -196,8 +145,9 @@ def sphere_shuffle(
     # invalid records get dest = axis_size (a virtual overflow destination)
     dest = jnp.where(ok, ids // bpd, axis_size)
 
-    (send_data, send_ids), in_range, origin, dropped_local = _build_send(
-        [data, ids], dest, axis_size, capacity, use_pallas)
+    (send_data, send_ids), in_range, origin, dropped_local = \
+        kops.partition_pack([data, ids], dest, axis_size, capacity,
+                            use_pallas=use_pallas)
     send_bucket = jnp.where(in_range, send_ids, -1)
     send_src = jnp.where(in_range, origin, -1)
 
@@ -253,8 +203,8 @@ def hierarchical_shuffle(
     # aggregates by destination DC (all records for DC g end up contiguous on
     # the staging nodes) and pre-places records so stage C is a no-op.
     dest_a = jnp.where(ok, owner % nodes, nodes)
-    (ta_data, ta_ids), in_a, origin_a, drop_a = _build_send(
-        [data, ids], dest_a, nodes, capacity_a, use_pallas)
+    (ta_data, ta_ids), in_a, origin_a, drop_a = kops.partition_pack(
+        [data, ids], dest_a, nodes, capacity_a, use_pallas=use_pallas)
     a_data = _a2a(ta_data, node_axis)
     a_ids = _a2a(jnp.where(in_a, ta_ids, -1), node_axis)
     a_src = _a2a(jnp.where(in_a, origin_a, -1), node_axis)
@@ -270,8 +220,9 @@ def hierarchical_shuffle(
     pos_a = jnp.arange(n_staged, dtype=jnp.int32)
     owner_b = jnp.where(f_valid, f_ids, 0) // bpd
     dest_b = jnp.where(f_valid, owner_b // nodes, dcs)
-    (tb_data, tb_ids, tb_src, tb_pos), in_b, _, drop_b = _build_send(
-        [f_data, f_ids, f_src, pos_a], dest_b, dcs, capacity_b, use_pallas)
+    (tb_data, tb_ids, tb_src, tb_pos), in_b, _, drop_b = kops.partition_pack(
+        [f_data, f_ids, f_src, pos_a], dest_b, dcs, capacity_b,
+        use_pallas=use_pallas)
 
     recv_data = _a2a(tb_data, dc_axis)
     recv_bucket = _a2a(jnp.where(in_b, tb_ids, -1), dc_axis)

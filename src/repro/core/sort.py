@@ -41,6 +41,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.shuffle import ShufflePlan
+from repro.kernels import ops as kops
 
 KEY_MAX = jnp.iinfo(jnp.int32).max
 
@@ -72,8 +73,11 @@ def sampled_splitters(keys: jax.Array, num_buckets: int,
 
     def local_sample(k):
         n = k.shape[0]
-        stride = max(n // sample_per_shard, 1)
-        samp = jax.lax.slice(k, (0,), (sample_per_shard * stride,), (stride,))
+        # clamp to the shard size: a shard smaller than sample_per_shard
+        # contributes every record instead of slicing out of bounds
+        take = min(sample_per_shard, n)
+        stride = max(n // take, 1)
+        samp = jax.lax.slice(k, (0,), (take * stride,), (stride,))
         return jax.lax.all_gather(samp, axis, tiled=True)
 
     gathered = shard_map(local_sample, mesh=mesh, in_specs=(P(axis),),
@@ -149,7 +153,9 @@ def hadoop_style_sort(
 ) -> SortResult:
     """Baseline: every reducer pulls the complete map output (block-store
     shuffle read amplification), then filters its own key range and sorts.
-    Semantically identical to :func:`terasort`; moves D× the bytes."""
+    Semantically identical to :func:`terasort`; moves D× the bytes.
+    ``use_pallas`` selects the Pallas bitonic kernel for the local sort
+    (matching terasort's stage-2 switch), else the XLA stable sort."""
     axis_size = mesh.shape[axis]
     if splitters is None:
         splitters = uniform_splitters(axis_size)
@@ -167,11 +173,16 @@ def hadoop_style_sort(
         # realistic capacity: same as terasort's receive capacity.
         cap = k.shape[0] * 2
         skey = jnp.where(mine, all_k, KEY_MAX)
-        order = jnp.argsort(skey, stable=True)[:cap]
-        sk = jnp.take(skey, order)
+        if use_pallas:
+            pos = jnp.arange(skey.shape[0], dtype=jnp.int32)
+            sk_row, order_row = kops.sort_kv_segments(skey[None, :],
+                                                      pos[None, :])
+            order, sk = order_row[0, :cap], sk_row[0, :cap]
+        else:
+            order = jnp.argsort(skey, stable=True)[:cap]
+            sk = jnp.take(skey, order)
         sp = jnp.take(all_p, order)
         sv = jnp.take(mine, order)
-        _, _, _ = spl, use_pallas, None
         return sk, sp, sv, jnp.zeros((), jnp.int32)
 
     sk, sp, sv, dropped = shard_map(

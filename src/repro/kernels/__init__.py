@@ -5,19 +5,28 @@ stage 1 hashes every record into a range bucket; stage 2 sorts each bucket
 locally. On commodity CPUs those are a table-driven scatter and quicksort; on
 TPU there is no efficient per-element scatter, so we adapt:
 
-- ``bucket_hist``   — per-tile one-hot histogram, computed as an MXU matmul.
+- ``bucket_hist``   — per-tile one-hot histogram, computed as an MXU matmul
+                      (int32 accumulation).
+- ``partition``     — fused histogram + stable counting rank in one pass:
+                      the O(n) shuffle send path (replaces the stable argsort
+                      every send used to pay).
 - ``bitonic_sort``  — in-VMEM bitonic network over (key, payload) pairs using
                       XOR-partner compare-exchange realized as reshapes/flips
-                      (no gather/scatter), the TPU-native sort.
+                      (no gather/scatter), the TPU-native sort; one grid step
+                      sorts a sublane-packed block of segments.
 
-``ops`` exposes jit'd wrappers; ``ref`` holds the pure-jnp oracles used by the
-tests' allclose sweeps.
+``ops`` exposes jit'd wrappers (including ``partition_pack``, the full
+rank → slot-map → gather send-tile builder); ``ref`` holds the pure-jnp
+oracles used by the tests' allclose sweeps.
 """
 
 from repro.kernels.ops import (
     bucket_histogram,
+    partition_pack,
+    partition_rank,
     sort_segments,
     sort_kv_segments,
 )
 
-__all__ = ["bucket_histogram", "sort_segments", "sort_kv_segments"]
+__all__ = ["bucket_histogram", "partition_pack", "partition_rank",
+           "sort_segments", "sort_kv_segments"]

@@ -6,15 +6,25 @@ and has no TPU analogue, so we adapt the insight ("sort whole segments where
 they live") to the TPU's vector units with a **bitonic sorting network**:
 
 - compare-exchange partners at distance ``j`` (a power of two) are obtained
-  by ``reshape(S//(2j), 2, j)`` + a flip along the middle axis — XOR-partner
-  addressing with *no gather/scatter*, pure relayout;
-- the ascending/descending direction of stage ``k`` depends only on the outer
-  index ``q``, so it is a broadcasted-iota predicate;
-- the whole network is O(S log^2 S) fully-vectorized compare-exchanges on a
-  segment resident in VMEM.
+  by viewing each segment row as ``(S//(2j), 2, j)`` and splitting the
+  middle axis — XOR-partner addressing with *no gather/scatter*;
+- the ascending/descending direction of stage ``k`` depends only on the
+  block index ``q``, so it is a broadcasted-iota predicate;
+- the whole network is O(S log² S) fully-vectorized compare-exchanges on
+  segments resident in VMEM.
 
-One grid step sorts one segment; the payload array is permuted alongside the
-keys (used to carry record indices through the sort).
+One grid step sorts a **block of segments** at once: the operands stay 2-D
+``(rows, S)`` — segments along the sublane axis, elements along the lane
+axis — and every compare-exchange is a sublane×lane-shaped select over all
+rows of the block simultaneously. (The original kernel flattened one row to
+1-D per grid step and rebuilt it with ``stack``/``reshape`` relayouts each
+stage; the 2-D form keeps the lane dimension intact for ``j >= lane`` and
+amortizes one grid step over ``rows`` segments — the multi-segment layout
+the segmented terasort stage 2 feeds it, where sorting ``bpd`` rows of
+``R/bpd`` cuts the network from O(R log² R) to O(R log² (R/bpd)).)
+
+The payload array is permuted alongside the keys (used to carry record
+indices through the sort).
 """
 
 from __future__ import annotations
@@ -28,40 +38,42 @@ from jax.experimental import pallas as pl
 
 
 def _compare_exchange(keys, vals, k_exp: int, j_exp: int):
-    """One bitonic stage: partners at distance 2^j_exp within blocks of
-    2^k_exp. keys/vals are flat (S,)."""
-    s = keys.shape[0]
+    """One bitonic stage over a (rows, S) block: partners at distance
+    2^j_exp within blocks of 2^k_exp, for every row at once."""
+    r, s = keys.shape
     j = 1 << j_exp
-    rows = s // (2 * j)
-    ks = keys.reshape(rows, 2, j)
-    vs = vals.reshape(rows, 2, j)
-    lo_k, hi_k = ks[:, 0, :], ks[:, 1, :]
-    lo_v, hi_v = vs[:, 0, :], vs[:, 1, :]
+    half = s // (2 * j)
+    ks = keys.reshape(r, half, 2, j)
+    vs = vals.reshape(r, half, 2, j)
+    lo_k, hi_k = ks[:, :, 0, :], ks[:, :, 1, :]
+    lo_v, hi_v = vs[:, :, 0, :], vs[:, :, 1, :]
     # ascending iff bit k_exp of the element index is 0; that bit lives at
-    # bit (k_exp - j_exp - 1) of the row index q.
+    # bit (k_exp - j_exp - 1) of the block index q.
     shift = k_exp - j_exp - 1
-    q = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    q = jax.lax.broadcasted_iota(jnp.int32, (1, half, 1), 1)
     dir_up = ((q >> shift) & 1) == 0
     swap = jnp.where(dir_up, lo_k > hi_k, lo_k < hi_k)
     new_lo_k = jnp.where(swap, hi_k, lo_k)
     new_hi_k = jnp.where(swap, lo_k, hi_k)
     new_lo_v = jnp.where(swap, hi_v, lo_v)
     new_hi_v = jnp.where(swap, lo_v, hi_v)
-    keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(s)
-    vals = jnp.stack([new_lo_v, new_hi_v], axis=1).reshape(s)
+    keys = jnp.concatenate([new_lo_k[:, :, None, :], new_hi_k[:, :, None, :]],
+                           axis=2).reshape(r, s)
+    vals = jnp.concatenate([new_lo_v[:, :, None, :], new_hi_v[:, :, None, :]],
+                           axis=2).reshape(r, s)
     return keys, vals
 
 
 def _bitonic_kernel(keys_ref, vals_ref, out_k_ref, out_v_ref):
     s = keys_ref.shape[-1]
     m = int(math.log2(s))
-    keys = keys_ref[...].reshape(s)
-    vals = vals_ref[...].reshape(s)
+    keys = keys_ref[...]                    # (rows, S): one block of segments
+    vals = vals_ref[...]
     for k_exp in range(1, m + 1):
         for j_exp in range(k_exp - 1, -1, -1):
             keys, vals = _compare_exchange(keys, vals, k_exp, j_exp)
-    out_k_ref[...] = keys.reshape(out_k_ref.shape)
-    out_v_ref[...] = vals.reshape(out_v_ref.shape)
+    out_k_ref[...] = keys
+    out_v_ref[...] = vals
 
 
 def _next_pow2(x: int) -> int:
@@ -74,14 +86,18 @@ def _max_sentinel(dtype):
     return jnp.array(jnp.iinfo(dtype).max, dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("rows_per_step", "interpret"))
 def sort_kv_segments_pallas(keys: jnp.ndarray, values: jnp.ndarray,
+                            rows_per_step: int = 8,
                             interpret: bool = True):
     """Sort each row of ``keys`` ascending, permuting ``values`` alongside.
 
-    keys/values: (num_segments, segment_len). Padding to the next power of two
-    uses a max sentinel so padded slots sort to the end and are sliced off.
-    Not stable — callers needing stability pack a unique tiebreak into keys.
+    keys/values: (num_segments, segment_len). Each grid step sorts
+    ``rows_per_step`` segments at once (sublane-packed). Padding — segment
+    length to the next power of two, segment count to a whole number of
+    blocks — uses a max sentinel so padded slots sort to the end and are
+    sliced off. Not stable — callers needing stability pack a unique
+    tiebreak into keys.
     """
     n, s = keys.shape
     s_pad = _next_pow2(s)
@@ -90,18 +106,26 @@ def sort_kv_segments_pallas(keys: jnp.ndarray, values: jnp.ndarray,
         pad_v = jnp.zeros((n, s_pad - s), values.dtype)
         keys = jnp.concatenate([keys, pad_k], axis=1)
         values = jnp.concatenate([values, pad_v], axis=1)
+    rb = max(1, min(rows_per_step, n))
+    n_pad = -(-n // rb) * rb
+    if n_pad != n:
+        pad_k = jnp.full((n_pad - n, s_pad), _max_sentinel(keys.dtype),
+                         keys.dtype)
+        pad_v = jnp.zeros((n_pad - n, s_pad), values.dtype)
+        keys = jnp.concatenate([keys, pad_k], axis=0)
+        values = jnp.concatenate([values, pad_v], axis=0)
     out_k, out_v = pl.pallas_call(
         _bitonic_kernel,
-        grid=(n,),
-        in_specs=[pl.BlockSpec((1, s_pad), lambda i: (i, 0)),
-                  pl.BlockSpec((1, s_pad), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((1, s_pad), lambda i: (i, 0)),
-                   pl.BlockSpec((1, s_pad), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((n, s_pad), keys.dtype),
-                   jax.ShapeDtypeStruct((n, s_pad), values.dtype)],
+        grid=(n_pad // rb,),
+        in_specs=[pl.BlockSpec((rb, s_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((rb, s_pad), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rb, s_pad), lambda i: (i, 0)),
+                   pl.BlockSpec((rb, s_pad), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_pad, s_pad), keys.dtype),
+                   jax.ShapeDtypeStruct((n_pad, s_pad), values.dtype)],
         interpret=interpret,
     )(keys, values)
-    return out_k[:, :s], out_v[:, :s]
+    return out_k[:n, :s], out_v[:n, :s]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -11,6 +11,11 @@ Grid iterates over tiles of the id vector; all grid steps map to the *same*
 output block, which Pallas keeps resident in VMEM and we accumulate into
 (initialized at step 0). Bucket ids outside [0, B) contribute nothing — the
 wrapper uses that to pad inputs to a whole number of tiles.
+
+The per-tile matmul runs in float32 (exact: a tile holds at most ``tile`` <
+2^24 records), but the running accumulator is **int32** — a float32
+accumulator silently loses +1 increments once a bucket's count passes 2^24
+(≈16.7M records), which is well inside a production shard.
 """
 
 from __future__ import annotations
@@ -35,9 +40,10 @@ def _hist_kernel(ids_ref, out_ref, *, num_buckets: int):
     buckets = jax.lax.broadcasted_iota(jnp.int32, (tile, num_buckets), 1)
     onehot = (ids.reshape(tile, 1) == buckets).astype(jnp.float32)
     ones = jnp.ones((1, tile), dtype=jnp.float32)
-    # MXU matmul: (1, tile) @ (tile, B) -> (1, B)
+    # MXU matmul: (1, tile) @ (tile, B) -> (1, B); per-tile counts <= tile
+    # < 2^24 so the f32 matmul is exact — accumulate in int32 (exact to 2^31)
     counts = jnp.dot(ones, onehot, preferred_element_type=jnp.float32)
-    out_ref[...] += counts
+    out_ref[...] += counts.astype(jnp.int32)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -64,7 +70,7 @@ def bucket_histogram_pallas(
         grid=grid,
         in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
         out_specs=pl.BlockSpec((1, b_pad), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, b_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((1, b_pad), jnp.int32),
         interpret=interpret,
     )(ids.reshape(1, n_pad))
-    return out[0, :num_buckets].astype(jnp.int32)
+    return out[0, :num_buckets]

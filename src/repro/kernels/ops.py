@@ -10,6 +10,7 @@ benchmark uses that switch to measure kernel-vs-oracle parity.
 from __future__ import annotations
 
 import os
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bucket_hist import bucket_histogram_pallas
 from repro.kernels.bitonic_sort import sort_kv_segments_pallas, sort_segments_pallas
+from repro.kernels.partition import partition_rank_pallas
 
 
 def _interpret_default() -> bool:
@@ -33,6 +35,73 @@ def bucket_histogram(bucket_ids: jnp.ndarray, num_buckets: int,
         return ref.bucket_histogram_ref(bucket_ids, num_buckets)
     return bucket_histogram_pallas(bucket_ids, num_buckets,
                                    interpret=_interpret_default())
+
+
+def partition_rank(dest: jnp.ndarray, num_dest: int,
+                   use_pallas: bool = True):
+    """Fused one-pass (stable rank, histogram) of a destination vector —
+    see :func:`repro.kernels.partition.partition_rank_pallas`."""
+    if not use_pallas:
+        return ref.partition_rank_ref(dest, num_dest)
+    return partition_rank_pallas(dest, num_dest,
+                                 interpret=_interpret_default())
+
+
+def partition_pack(
+    columns: Sequence[jnp.ndarray],
+    dest: jnp.ndarray,
+    num_dest: int,
+    capacity: int,
+    use_pallas: bool = True,
+) -> Tuple[List[jnp.ndarray], jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(n) fused partition/pack: lay records out contiguously per
+    destination and pack fixed-size ``(num_dest, capacity, ...)`` tiles.
+
+    This is the shuffle send-path primitive (every ``sphere_shuffle`` /
+    ``hierarchical_shuffle`` stage, the MoE expert regroup, and the
+    segmented stage-2 sort all go through it). It replaces the historical
+    stable-argsort + histogram + gather with one fused rank pass (Pallas
+    kernel or jnp oracle), an O(n) slot-map scatter, and one gather per
+    column — reproducing the stable-argsort layout exactly: destination
+    d's records occupy slots [0, counts[d]) of row d in arrival order, and
+    records past ``capacity`` are dropped *from the tail* (later arrivals
+    lose, exactly as the argsort layout dropped them).
+
+    Args:
+      columns: arrays sharing leading dim n; each is packed into its own
+        tile stack (dtypes are preserved — records are moved, not summed).
+      dest: (n,) int32; ids outside [0, num_dest) are never packed (callers
+        use ``num_dest`` as the virtual overflow destination).
+      capacity: slots per destination.
+    Returns (tiles, in_range, origin, dropped_local):
+      tiles[i]:  (num_dest, capacity, *columns[i].shape[1:])
+      in_range:  (num_dest, capacity) bool — slot holds a real record
+      origin:    (num_dest, capacity) int32 source row (-1 on empty slots;
+                 meaningful only where ``in_range``)
+      dropped_local: () int32 — records beyond capacity, this shard only.
+    """
+    dest = jnp.asarray(dest, jnp.int32).reshape(-1)
+    n = dest.shape[0]
+    if n == 0:
+        tiles = [jnp.zeros((num_dest, capacity) + c.shape[1:], c.dtype)
+                 for c in columns]
+        return (tiles, jnp.zeros((num_dest, capacity), bool),
+                jnp.full((num_dest, capacity), -1, jnp.int32),
+                jnp.zeros((), jnp.int32))
+    rank, counts = partition_rank(dest, num_dest, use_pallas=use_pallas)
+    ok = (dest >= 0) & (dest < num_dest) & (rank < capacity)
+    slot = jnp.where(ok, dest * capacity + rank, num_dest * capacity)
+    origin = (jnp.full((num_dest * capacity + 1,), -1, jnp.int32)
+              .at[slot].set(jnp.arange(n, dtype=jnp.int32))
+              [:num_dest * capacity].reshape(num_dest, capacity))
+    cap_iota = jnp.arange(capacity, dtype=counts.dtype)[None, :]
+    in_range = cap_iota < counts[:, None]
+    gidx = jnp.clip(origin, 0, n - 1).reshape(-1)
+    tiles = [jnp.take(col, gidx, axis=0)
+             .reshape((num_dest, capacity) + col.shape[1:])
+             for col in columns]
+    dropped_local = jnp.sum(jnp.maximum(counts - capacity, 0)).astype(jnp.int32)
+    return tiles, in_range, origin, dropped_local
 
 
 def sort_segments(keys: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:

@@ -6,6 +6,7 @@ fallback implementation path when Pallas is unavailable.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -21,6 +22,44 @@ def bucket_histogram_ref(bucket_ids: jnp.ndarray, num_buckets: int) -> jnp.ndarr
     ids = bucket_ids.astype(jnp.int32)
     onehot = (ids[:, None] == jnp.arange(num_buckets, dtype=jnp.int32)[None, :])
     return jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def partition_rank_ref(dest: jnp.ndarray, num_dest: int, tile: int = 4096):
+    """Fused (stable rank, histogram) of the destination vector.
+
+    ``rank[i]`` counts earlier records with the same destination — the slot
+    record i occupies within destination ``dest[i]``'s contiguous run, in
+    arrival order (the exact layout a stable argsort by destination would
+    produce). Out-of-range ids (< 0 or >= num_dest) count nothing and get
+    an unspecified rank. O(n · num_dest) vectorized work, no sort — the
+    one-hot cumsum runs as a scan over ``tile``-row chunks carrying the
+    per-destination base (mirroring the Pallas kernel's grid), so transient
+    memory is O(tile · num_dest) rather than O(n · num_dest).
+
+    Args:
+      dest: int32 (n,)
+      num_dest: static python int
+    Returns:
+      (rank int32 (n,), counts int32 (num_dest,))
+    """
+    ids = dest.astype(jnp.int32).reshape(-1)
+    n = ids.shape[0]
+    if n == 0:
+        return ids, jnp.zeros((num_dest,), jnp.int32)
+    tile = min(tile, n)
+    n_pad = (n + tile - 1) // tile * tile
+    padded = jnp.full((n_pad,), -1, jnp.int32).at[:n].set(ids)
+    cols = jnp.arange(num_dest, dtype=jnp.int32)[None, :]
+
+    def step(base, chunk):
+        oh = chunk[:, None] == cols
+        cum = jnp.cumsum(oh.astype(jnp.int32), axis=0)
+        rank = jnp.sum(jnp.where(oh, cum - 1 + base[None, :], 0), axis=1)
+        return base + cum[-1], rank
+
+    counts, ranks = jax.lax.scan(step, jnp.zeros((num_dest,), jnp.int32),
+                                 padded.reshape(-1, tile))
+    return ranks.reshape(-1)[:n], counts
 
 
 def sort_segments_ref(keys: jnp.ndarray) -> jnp.ndarray:

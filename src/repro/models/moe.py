@@ -25,7 +25,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
-from repro.core.shuffle import ShufflePlan, _build_send
+from repro.core.shuffle import ShufflePlan
+from repro.kernels.ops import partition_pack
 from repro.models.layers import COMPUTE_DTYPE, dense_init
 
 
@@ -128,7 +129,8 @@ def _moe_sphere_local(params_local, x_local, cfg: ModelConfig,
     res = plan.shuffle(rec, buckets)
 
     # local regroup (stage C of the shuffle, on-device): received rows ->
-    # (E_loc, C2, d) per local expert, via the shared layout machinery
+    # (E_loc, C2, d) per local expert, via the same fused O(n)
+    # partition/pack the send path uses (no sort in the dispatch hot loop)
     e_loc = num_buckets // ep
     me = plan.device_index()
     flat = res.data.reshape(-1, d + 1)
@@ -137,8 +139,8 @@ def _moe_sphere_local(params_local, x_local, cfg: ModelConfig,
     n_recv = flat.shape[0]
     c2 = int(n_recv / e_loc * cfg.capacity_factor) + 1
     dest = jnp.where(fvalid, fbucket, e_loc)            # invalid -> overflow
-    (grouped,), in_rng, origin, _ = _build_send([flat], dest, e_loc, c2,
-                                                plan.use_pallas)
+    (grouped,), in_rng, origin, _ = partition_pack(
+        [flat], dest, e_loc, c2, use_pallas=plan.use_pallas)
     xe, pe = grouped[..., :d], grouped[..., d]
 
     ye = _expert_ffn(params_local["w_gate"], params_local["w_up"],

@@ -21,8 +21,10 @@ The same pipeline object runs on two executors with identical results:
 - :class:`SPMDExecutor` fuses every stage into ONE ``jit(shard_map(...))``
   program: maps/reduces inline per device, shuffles become capacity-bounded
   ``all_to_all`` via :class:`repro.core.shuffle.ShufflePlan` (flat or
-  two-level wide-area), sort uses the Pallas bitonic kernel. Compiled
-  programs are cached keyed on (pipeline, plan, input shapes/dtypes).
+  two-level wide-area, all sends through the fused O(n) partition/pack),
+  sort stage 2 regroups bucket-major and runs the multi-segment Pallas
+  bitonic kernel. Compiled programs are cached keyed on (pipeline, plan,
+  input shapes/dtypes).
 - :class:`HostExecutor` lowers the same graph onto
   :class:`repro.sphere.engine.SphereProcess` / SPEs over Sector-stored
   files: maps run at the SPEs with locality scheduling and retry, shuffle
@@ -261,7 +263,7 @@ class SPMDExecutor:
                             jnp.asarray(rd, jnp.int32), axes)
                 elif isinstance(stage, ShuffleStage):
                     ids = jnp.asarray(stage.by(records)).reshape(-1)
-                    records, valid, d = self._exchange(
+                    records, valid, d, _ = self._exchange(
                         records, valid, ids, stage.num_buckets,
                         stage.capacity_factor)
                     dropped += d
@@ -295,11 +297,26 @@ class SPMDExecutor:
         plan = self._stage_plan(num_buckets, packed.shape[0], capacity_factor)
         res = plan.shuffle(packed, ids.astype(jnp.int32), valid=valid)
         flat = res.data.reshape(-1, codec.nbytes)
-        return codec.unpack(flat), res.valid.reshape(-1), res.dropped
+        return codec.unpack(flat), res.valid.reshape(-1), res.dropped, plan
 
     def _sort(self, records, valid, stage: SortStage):
-        """Range-partition shuffle (stage 1) + local segment sort (stage 2,
-        Pallas bitonic kernel when ``use_pallas``) — paper §4.2 / Fig 3."""
+        """Range-partition shuffle (stage 1) + local **segmented** sort
+        (stage 2) — paper §4.2 / Fig 3.
+
+        Stage 2 regroups the received records bucket-major with the same
+        fused O(n) partition/pack the send path uses, then sorts the
+        ``buckets_per_device`` segments independently (the Pallas
+        multi-segment bitonic kernel when ``use_pallas``, else the row-sort
+        oracle). Because each device's buckets are consecutive key ranges,
+        concatenating its sorted segments is already globally sorted —
+        cutting the sorting-network work from O(R log² R) to
+        O(R log² (R/bpd)). With one bucket per device the segment is the
+        whole receive buffer and the layout matches the historical path
+        exactly. Segments get ``capacity_factor`` headroom over the uniform
+        share; records past a segment's capacity are dropped *and counted*
+        (the same §3.5.1 bounded-skew contract as the shuffle itself —
+        impossible when ``buckets_per_device == 1``).
+        """
         nb = (self.plan.num_buckets if self.plan is not None
               else stage.num_buckets or self.axis_size)
         if stage.splitters is not None:
@@ -310,22 +327,37 @@ class SPMDExecutor:
             spl = jnp.linspace(0, _KEY_MAX, nb + 1)[1:-1].astype(jnp.int32)
         keys = jnp.asarray(stage.key(records)).astype(jnp.int32).reshape(-1)
         bucket = jnp.searchsorted(spl, keys, side="right").astype(jnp.int32)
-        records, valid, dropped = self._exchange(
+        records, valid, dropped, plan = self._exchange(
             records, valid, bucket, nb, stage.capacity_factor)
-        # stage 2: invalid rows sink (key forced to KEY_MAX), so the valid
-        # prefix is the first sum(valid) rows. Requires real keys < KEY_MAX.
+
+        # stage 2: bucket-major regroup (O(n) partition, stable) ...
         keys = jnp.asarray(stage.key(records)).astype(jnp.int32).reshape(-1)
-        skey = jnp.where(valid, keys, _KEY_MAX)
-        nv = jnp.sum(valid.astype(jnp.int32))
-        if self.use_pallas:
-            rows = jnp.arange(skey.shape[0], dtype=jnp.int32)
-            _, srows = kops.sort_kv_segments(skey[None, :], rows[None, :])
-            order = srows[0]
-        else:
-            order = jnp.argsort(skey, stable=True)
-        records = jax.tree.map(lambda a: jnp.take(a, order, axis=0), records)
-        valid = jnp.arange(skey.shape[0], dtype=jnp.int32) < nv
-        return records, valid, dropped
+        skey = jnp.where(valid, keys, _KEY_MAX)  # requires real keys < KEY_MAX
+        r = skey.shape[0]
+        bpd = plan.buckets_per_device
+        seg_cap = (r if bpd == 1 else
+                   min(r, int(r / bpd * stage.capacity_factor) + 1))
+        local = (jnp.searchsorted(spl, skey, side="right").astype(jnp.int32)
+                 - plan.device_index() * bpd)
+        seg_dest = jnp.where(valid, local, bpd)       # invalid -> overflow
+        leaves, treedef = jax.tree.flatten(records)
+        tiles, in_rng, _, seg_drop = kops.partition_pack(
+            [skey] + leaves, seg_dest, bpd, seg_cap,
+            use_pallas=self.use_pallas)
+        dropped += jax.lax.psum(seg_drop, plan.pmean_axes())
+
+        # ... then one multi-segment sort: bpd rows of seg_cap. Empty slots
+        # carry the KEY_MAX sentinel so each segment's valid records end up
+        # in its prefix — exactly where ``in_rng`` already points.
+        seg_keys = jnp.where(in_rng, tiles[0], _KEY_MAX)
+        pos = jnp.arange(bpd * seg_cap, dtype=jnp.int32).reshape(bpd, seg_cap)
+        _, order = kops.sort_kv_segments(seg_keys, pos,
+                                         use_pallas=self.use_pallas)
+        order = order.reshape(-1)
+        records = jax.tree.unflatten(treedef, [
+            jnp.take(t.reshape((bpd * seg_cap,) + t.shape[2:]), order, axis=0)
+            for t in tiles[1:]])
+        return records, in_rng.reshape(-1), dropped
 
 
 # -- host (Sector/SPE) executor ----------------------------------------------

@@ -27,8 +27,22 @@ def test_bucket_histogram_ignores_out_of_range():
     np.testing.assert_array_equal(np.asarray(got), [1, 1, 0, 0])
 
 
+def test_bucket_histogram_exact_past_2_24():
+    """Regression: the kernel used to accumulate counts in float32, which
+    cannot represent 2^24 + 4 — every +1 past 16.7M records was silently
+    rounded away. The int32 accumulator must be exact."""
+    from repro.kernels.bucket_hist import bucket_histogram_pallas
+    n = (1 << 24) + 9
+    ids = np.zeros(n, np.int32)
+    ids[:5] = 1
+    got = bucket_histogram_pallas(jnp.asarray(ids), 4, tile=1 << 18,
+                                  interpret=True)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), [n - 5, 5, 0, 0])
+
+
 @pytest.mark.parametrize("rows,cols", [(1, 2), (3, 9), (2, 128), (1, 1000),
-                                       (4, 257)])
+                                       (4, 257), (17, 33), (9, 8)])
 @pytest.mark.parametrize("dtype", [np.int32, np.float32])
 def test_sort_segments_sweep(rows, cols, dtype):
     if dtype == np.int32:

@@ -10,26 +10,32 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.core.mapreduce import reduce_by_key_sum
-from repro.core.shuffle import _per_dest_layout
 from repro.core.sort import uniform_splitters
+from repro.kernels.ops import partition_pack
 from repro.train.checkpoint import _deserialize_leaves, _serialize_tree
 
 
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.integers(0, 7), min_size=1, max_size=200))
-def test_per_dest_layout_partitions(dests):
-    """Stable sort by destination: contiguous runs, counts/offsets
-    consistent, and the permutation preserves relative order per dest."""
+def test_partition_pack_layout_partitions(dests):
+    """The O(n) fused partition/pack behind every shuffle send: each
+    destination row holds exactly its records, in arrival order (the
+    stable-sort layout), with consistent counts and no drops at full
+    capacity."""
+    n = len(dests)
     d = jnp.asarray(dests, jnp.int32)
-    order, counts, offsets = _per_dest_layout(d, 8)
-    order, counts, offsets = map(np.asarray, (order, counts, offsets))
-    assert counts.sum() == len(dests)
-    sorted_d = np.asarray(dests)[order]
-    assert (np.diff(sorted_d) >= 0).all()
+    (tile,), in_range, origin, dropped = partition_pack(
+        [d], d, 8, n, use_pallas=False)
+    tile, in_range, origin = map(np.asarray, (tile, in_range, origin))
+    assert int(dropped) == 0
+    assert in_range.sum() == n
     for b in range(8):
-        run = order[offsets[b]:offsets[b] + counts[b]]
+        run = origin[b][in_range[b]]
         assert all(dests[i] == b for i in run)
-        assert (np.diff(run) > 0).all()       # stability within a dest
+        if len(run) > 1:
+            assert (np.diff(run) > 0).all()   # stability within a dest
+        assert (tile[b][in_range[b]] == b).all()
+    assert (origin[~in_range] == -1).all()
 
 
 @settings(max_examples=40, deadline=None)
