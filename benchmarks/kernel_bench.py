@@ -18,16 +18,30 @@ Cases:
 - ``segmented_sort``    — stage-2 economics: sorting bpd bucket-major
                           segments of R/bpd vs one R-row segment
                           (O(R log² (R/bpd)) vs O(R log² R)).
+- ``wire_bytes_per_hop``   — the ISSUE-5 headline: bytes one flat shuffle
+                          hop ships for int32-pair records under the fused
+                          one-wire-tensor frame (payload rows + one
+                          count-header row per tile) vs the retired
+                          4-tensor layout (data + valid + bucket + src,
+                          each capacity-padded).
+- ``collectives_per_hop``  — jaxpr-counted ``all_to_all`` per hop (flat /
+                          hierarchical, shuffle / combine, chunked), traced
+                          on 8 virtual devices in a subprocess; also checks
+                          the chunked (W=4) hop delivers the identical
+                          record multiset as W=1.
 
 ``--json PATH`` additionally writes the machine-readable
-``BENCH_kernels.json`` (the first point of the perf trajectory; CI runs
-this as a smoke step and ``--check`` asserts the fused partition path beats
-the argsort layout).
+``BENCH_kernels.json`` (the perf trajectory; CI runs this as a smoke step
+and ``--check`` asserts the fused partition path beats the argsort layout,
+the fused frame halves int32-pair wire bytes, and collectives-per-hop
+stays at 1 flat / 2 hierarchical per chunk).
 """
 
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 import time
 from typing import Dict, List
@@ -36,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.records import WireFrame
 from repro.kernels import ops, ref
 
 
@@ -68,6 +83,115 @@ def _argsort_send_layout(num_dest: int, capacity: int):
         return tile, cap_iota < counts[:, None]
 
     return layout
+
+
+_COLLECTIVES_CODE = """
+import jax, numpy as np, jax.numpy as jnp, dataclasses, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.introspect import collective_counts
+from repro.core.shuffle import ShufflePlan
+
+mesh1 = jax.make_mesh((8,), ("data",))
+mesh2 = jax.make_mesh((2, 4), ("dc", "node"))
+N = 8 * 512
+n_local = N // 8
+flat = ShufflePlan.for_mesh(mesh1, 16, n_local, 2.5, ("data",))
+hier = ShufflePlan.for_mesh(mesh2, 16, n_local, 2.5, ("dc", "node"))
+d0 = jnp.zeros((N, 3), jnp.int32)
+b0 = jnp.zeros((N,), jnp.int32)
+
+def shuf(plan):
+    def f(d, b):
+        r = plan.shuffle(d, b.reshape(-1))
+        return r.data, r.valid, r.dropped
+    return f
+
+def shuf_comb(plan):
+    def f(d, b):
+        r = plan.shuffle(d, b.reshape(-1))
+        return plan.combine(r.data.astype(jnp.float32) * 2.0, r, n_local)
+    return f
+
+def count3(fn, mesh, spec):
+    f = shard_map(fn, mesh=mesh, in_specs=(spec, spec),
+                  out_specs=(spec, spec, P()), check_vma=False)
+    return collective_counts(f, d0, b0)["all_to_all"]
+
+def count2(fn, mesh, spec):
+    f = shard_map(fn, mesh=mesh, in_specs=(spec, spec),
+                  out_specs=(spec, spec), check_vma=False)
+    return collective_counts(f, d0, b0)["all_to_all"]
+
+s1, s2 = P("data"), P(("dc", "node"))
+out = {
+    "flat_shuffle": count3(shuf(flat), mesh1, s1),
+    "hier_shuffle": count3(shuf(hier), mesh2, s2),
+    "flat_shuffle_w4": count3(shuf(dataclasses.replace(flat, chunks=4)),
+                              mesh1, s1),
+    "hier_shuffle_w4": count3(shuf(dataclasses.replace(hier, chunks=4)),
+                              mesh2, s2),
+}
+out["flat_with_combine"] = count2(shuf_comb(flat), mesh1, s1)
+out["hier_with_combine"] = count2(shuf_comb(hier), mesh2, s2)
+
+# chunked W=4 must deliver the identical record multiset as W=1
+rng = np.random.default_rng(0)
+data = rng.integers(0, 1 << 20, size=(N, 3)).astype(np.int32)
+buckets = rng.integers(0, 16, size=N).astype(np.int32)
+def run_plan(plan):
+    dd = jax.device_put(jnp.asarray(data), NamedSharding(mesh1, s1))
+    bd = jax.device_put(jnp.asarray(buckets), NamedSharding(mesh1, s1))
+    def udf(d, b):
+        r = plan.shuffle(d, b.reshape(-1))
+        return r.data.reshape(-1, 3), r.valid.reshape(-1), r.dropped
+    with mesh1:
+        rd, rv, drop = shard_map(udf, mesh=mesh1, in_specs=(s1, s1),
+                                 out_specs=(s1, s1, P()),
+                                 check_vma=False)(dd, bd)
+    assert int(drop) == 0
+    return sorted(map(tuple, np.asarray(rd)[np.asarray(rv)]))
+out["chunked_match"] = run_plan(flat) == run_plan(
+    dataclasses.replace(flat, chunks=4))
+print("RESULT " + json.dumps(out))
+"""
+
+
+def collectives_per_hop() -> Dict[str, object]:
+    """jaxpr-count all_to_all per shuffle hop on 8 virtual devices (own
+    subprocess: XLA_FLAGS must be set before jax initializes)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _COLLECTIVES_CODE], env=env,
+                          capture_output=True, text=True, timeout=520)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def wire_bytes_per_hop(n: int = 1 << 16, num_dest: int = 8) -> Dict[str, float]:
+    """Static wire accounting of one flat shuffle hop over int32-pair
+    records: the fused one-tensor frame vs the retired 4-tensor layout."""
+    capacity = 2 * n // num_dest
+    rec_bytes = 8                              # (key, value) int32 pair
+    # retired layout: data + valid(bool byte) + bucket(i32) + src(i32),
+    # each its own capacity-padded all_to_all tile
+    legacy = num_dest * capacity * (rec_bytes + 1 + 4 + 4)
+    fused_min = num_dest * WireFrame("int32", (2,)).tile_nbytes(capacity)
+    fused_full = num_dest * WireFrame(
+        "int32", (2,), meta=("bucket", "src")).tile_nbytes(capacity)
+    return {
+        "n": n, "num_dest": num_dest, "capacity": capacity,
+        "rec_bytes": rec_bytes,
+        "legacy_4tensor_bytes": legacy,
+        "fused_frame_bytes_min": fused_min,    # wire_meta="min" (dataflow)
+        "fused_frame_bytes_full": fused_full,  # wire_meta="full" (combine)
+        "reduction_min": legacy / fused_min,
+        "reduction_full": legacy / fused_full,
+    }
 
 
 def run(csv: bool = True, json_path: str | None = None) -> List[str]:
@@ -134,6 +258,27 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
     results["segmented_speedup_vs_single"] = {
         "ratio": t_one / t_seg, "r": r, "bpd": bpd}
 
+    # -- one-wire-tensor shuffle: wire bytes + collective counts per hop ------
+    wb = wire_bytes_per_hop()
+    results["wire_bytes_per_hop"] = wb
+    lines.append(
+        f"kernel_wire_bytes_per_hop,0,"
+        f"legacy={wb['legacy_4tensor_bytes']} "
+        f"fused_min={wb['fused_frame_bytes_min']} "
+        f"reduction={wb['reduction_min']:.2f}x "
+        f"(int32-pair records, {wb['num_dest']} dests, "
+        f"cap={wb['capacity']})")
+    cc = collectives_per_hop()
+    results["collectives_per_hop"] = cc
+    lines.append(
+        f"kernel_collectives_per_hop,0,"
+        f"flat={cc['flat_shuffle']} hier={cc['hier_shuffle']} "
+        f"flat_w4={cc['flat_shuffle_w4']} hier_w4={cc['hier_shuffle_w4']} "
+        f"flat+combine={cc['flat_with_combine']} "
+        f"hier+combine={cc['hier_with_combine']} "
+        f"chunked_match={cc['chunked_match']} "
+        f"(all_to_all per hop; was 4 flat / 9 hier / 7 / 15 with combine)")
+
     if json_path:
         from repro.kernels.ops import _interpret_default
         payload = {
@@ -169,12 +314,41 @@ def main() -> None:
     if check:
         with open(json_path) as f:
             payload = json.load(f)
-        ratio = payload["results"]["partition_speedup_vs_argsort"]["ratio"]
+        res = payload["results"]
+        failures = []
+        ratio = res["partition_speedup_vs_argsort"]["ratio"]
         if ratio <= 1.0:
-            print(f"CHECK FAILED: fused partition path is not beating the "
-                  f"argsort layout (speedup {ratio:.2f}x)")
+            failures.append(f"fused partition path is not beating the "
+                            f"argsort layout (speedup {ratio:.2f}x)")
+        wb = res["wire_bytes_per_hop"]
+        if wb["reduction_min"] < 2.0:
+            failures.append(f"fused frame is not >=2x smaller than the "
+                            f"4-tensor layout ({wb['reduction_min']:.2f}x)")
+        cc = res["collectives_per_hop"]
+        if cc["flat_shuffle"] > 1 or cc["flat_shuffle_w4"] > 4:
+            failures.append(f"flat shuffle regressed above 1 all_to_all per "
+                            f"hop per chunk ({cc['flat_shuffle']}, "
+                            f"W4={cc['flat_shuffle_w4']})")
+        if cc["hier_shuffle"] > 2 or cc["hier_shuffle_w4"] > 8:
+            failures.append(f"hierarchical shuffle regressed above 2 "
+                            f"all_to_all per hop per chunk "
+                            f"({cc['hier_shuffle']}, "
+                            f"W4={cc['hier_shuffle_w4']})")
+        if cc["flat_with_combine"] > 2 or cc["hier_with_combine"] > 4:
+            failures.append(f"combine collective count regressed "
+                            f"(flat {cc['flat_with_combine']} > 2 or hier "
+                            f"{cc['hier_with_combine']} > 4)")
+        if not cc["chunked_match"]:
+            failures.append("chunked (W=4) shuffle delivery differs from "
+                            "W=1")
+        if failures:
+            for msg in failures:
+                print(f"CHECK FAILED: {msg}")
             sys.exit(1)
-        print(f"CHECK OK: fused partition path {ratio:.2f}x vs argsort")
+        print(f"CHECK OK: fused partition {ratio:.2f}x vs argsort; wire "
+              f"bytes {wb['reduction_min']:.2f}x smaller; collectives/hop "
+              f"flat={cc['flat_shuffle']} hier={cc['hier_shuffle']}; "
+              f"W=4 delivery matches W=1")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,11 @@ per node), worst-case zero-drop capacities drawn from a multinomial model:
             to the flow-count ratio: (dcs-1) / ((dcs-1) * nodes) =
             1/nodes_per_dc.
 
+Also priced: the one-wire-tensor frame layout (``wan_frame_bytes`` — fused
+payload rows + one count-header row per tile, ``wire_meta="min"``) against
+the retired multi-collective layout (``wan_legacy_bytes`` — separate
+capacity-padded data/valid/bucket/src tensors), for both paths.
+
 Also reported: per-round WAN time (flow setup RTTs + payload over the shared
 uplink, UDT vs TCP via :class:`repro.sector.transport.TransferSimulator`)
 and a *measured* 8-virtual-device run checking the two paths deliver the
@@ -104,6 +109,12 @@ def model_wan_round(
 
     pf = flat.wan_profile(dcs, nodes, rec_bytes, wire_quantum_records)
     ph = hier.wan_profile(dcs, nodes, rec_bytes, wire_quantum_records)
+    # fused one-tensor frame vs the retired multi-collective layout, at the
+    # executor's wire_meta="min" (pure payload + per-tile count header)
+    pf_min = flat.wan_profile(dcs, nodes, rec_bytes, wire_quantum_records,
+                              wire_meta="min")
+    ph_min = hier.wan_profile(dcs, nodes, rec_bytes, wire_quantum_records,
+                              wire_meta="min")
     useful = int(n_local * (dcs - 1) / dcs * rec_bytes)  # either path
 
     def wan_time(profile, protocol: str) -> float:
@@ -122,6 +133,13 @@ def model_wan_round(
         "flow_ratio": ph["wan_tiles"] / pf["wan_tiles"],
         "slot_ratio": ph["wan_slot_bytes"] / pf["wan_slot_bytes"],
         "wire_ratio": ph["wan_wire_bytes"] / pf["wan_wire_bytes"],
+        # one-wire-tensor framing: bytes of the fused frame (wire_meta="min",
+        # the dataflow executor's setting) over the retired 4/5-tensor layout
+        "frame_ratio_flat": (pf_min["wan_frame_bytes"]
+                             / pf["wan_legacy_bytes"]),
+        "frame_ratio_hier": (ph_min["wan_frame_bytes"]
+                             / ph["wan_legacy_bytes"]),
+        "flat_min": pf_min, "hier_min": ph_min,
         "time_flat_udt": wan_time(pf, "udt"),
         "time_hier_udt": wan_time(ph, "udt"),
         "time_flat_tcp": wan_time(pf, "tcp"),
@@ -217,6 +235,13 @@ def run(csv: bool = True) -> List[str]:
         f"flows={m['flow_ratio']:.4f} "
         f"target<=1/{m['nodes']}={1.0 / m['nodes']:.4f} "
         f"({m['dcs']}x{m['nodes']} testbed, segment={m['n_local']} recs)")
+    lines.append(
+        f"wan_shuffle_model_frame,0,"
+        f"fused_vs_legacy_flat={m['frame_ratio_flat']:.3f} "
+        f"fused_vs_legacy_hier={m['frame_ratio_hier']:.3f} "
+        f"frameMB_hier={m['hier_min']['wan_frame_bytes'] * mb:.2f} "
+        f"legacyMB_hier={m['hier']['wan_legacy_bytes'] * mb:.2f} "
+        f"(one wire tensor/hop, wire_meta=min, {REC_BYTES}B records)")
     for r in measured_8dev():
         parts = r.split()
         lines.append(f"wan_shuffle_measured_{parts[1]},{parts[2]},"

@@ -12,14 +12,18 @@ The paper's abstractions map onto SPMD JAX:
 - *MapReduce as Map UDF + Reduce UDF* (§3.6)
                             -> :func:`repro.core.mapreduce.map_reduce`;
 - *records* of any fixed-shape pytree schema
-                            -> :class:`repro.core.records.RecordCodec`.
+                            -> :class:`repro.core.records.RecordCodec`;
+- *framed UDT transfers* (§2.3: one large framed stream per hop)
+                            -> :class:`repro.core.records.WireFrame`
+  (every shuffle hop ships exactly one fused wire tensor; the structural
+  guarantee is checkable via :mod:`repro.core.introspect`).
 
 These are the primitives; the one-API-two-executors layer on top is
 :mod:`repro.sphere.dataflow` (``Dataflow`` / ``SPMDExecutor`` /
 ``HostExecutor``).
 """
 
-from repro.core.records import RecordCodec
+from repro.core.records import RecordCodec, WireFrame
 from repro.core.stream import SphereStream
 from repro.core.udf import sphere_map
 from repro.core.shuffle import ShuffleResult, sphere_shuffle, sphere_combine
@@ -27,7 +31,7 @@ from repro.core.sort import terasort, hadoop_style_sort
 from repro.core.mapreduce import map_reduce
 
 __all__ = [
-    "RecordCodec", "SphereStream", "sphere_map",
+    "RecordCodec", "WireFrame", "SphereStream", "sphere_map",
     "ShuffleResult", "sphere_shuffle", "sphere_combine",
     "terasort", "hadoop_style_sort", "map_reduce",
 ]

@@ -1,0 +1,54 @@
+"""Jaxpr introspection: count primitives in a traced program.
+
+The one-wire-tensor shuffle's acceptance contract is structural — exactly
+one ``all_to_all`` per flat hop, two per hierarchical hop (times ``chunks``)
+— so the tests and the CI smoke step assert it directly on the jaxpr rather
+than trusting byte accounting. Works on any traceable callable, including
+``shard_map``-wrapped shuffles (the collectives sit inside the shard_map
+sub-jaxpr; the walk recurses through every sub-jaxpr it finds in equation
+params: pjit bodies, cond branches, scan/while carries, shard_map, ...).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+
+#: primitives that move bytes between devices.
+COLLECTIVE_PRIMITIVES = (
+    "all_to_all", "all_gather", "psum", "ppermute", "reduce_scatter",
+    "pmax", "pmin",
+)
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        for x in (v if isinstance(v, (tuple, list)) else (v,)):
+            if hasattr(x, "jaxpr") and hasattr(x, "consts"):   # ClosedJaxpr
+                yield x.jaxpr
+            elif hasattr(x, "eqns"):                           # Jaxpr
+                yield x
+
+
+def primitive_counts(fn: Callable, *args, **kwargs) -> Dict[str, int]:
+    """Trace ``fn(*args, **kwargs)`` and count every primitive, recursing
+    through sub-jaxprs. Returns ``{primitive_name: count}``."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs).jaxpr
+    acc: Dict[str, int] = {}
+
+    def walk(j):
+        for eqn in j.eqns:
+            acc[eqn.primitive.name] = acc.get(eqn.primitive.name, 0) + 1
+            for sub in _sub_jaxprs(eqn):
+                walk(sub)
+
+    walk(jaxpr)
+    return acc
+
+
+def collective_counts(fn: Callable, *args, **kwargs) -> Dict[str, int]:
+    """Like :func:`primitive_counts`, filtered to cross-device collectives
+    (every name in :data:`COLLECTIVE_PRIMITIVES`, 0 when absent)."""
+    counts = primitive_counts(fn, *args, **kwargs)
+    return {name: counts.get(name, 0) for name in COLLECTIVE_PRIMITIVES}

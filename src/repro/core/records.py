@@ -26,7 +26,7 @@ bools travel as one byte.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -216,3 +216,175 @@ class RecordCodec:
                     f"field mismatch: got {np.dtype(leaf.dtype)}{tuple(leaf.shape)}, "
                     f"codec expects {dt} with trailing shape {shape}")
         return leaves
+
+
+# -- wire framing -------------------------------------------------------------
+
+
+#: bytes of the per-tile count header (one int32 per destination tile).
+COUNT_NBYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFrame:
+    """Header codec for the one-wire-tensor shuffle hop.
+
+    A shuffle hop historically shipped four capacity-padded tensors per
+    exchange (``data``, ``valid``, ``bucket``, ``src_pos``) — four
+    ``all_to_all`` collectives, each paying its own padding. A ``WireFrame``
+    fuses everything into **one** ``uint8`` tensor: each record becomes one
+    byte *row* holding its payload plus whatever per-record metadata the hop
+    actually needs, and validity travels either
+
+    - **positionally** (the default): :func:`repro.kernels.ops.partition_pack`
+      lays real records out in the prefix slots of each destination tile, so
+      one int32 *count* per tile (carried in an extra header row prepended by
+      :meth:`seal`) fully encodes the old per-slot validity mask — zero
+      per-record overhead; or
+    - **explicitly** (``explicit_valid=True``): a leading validity byte per
+      row, for return-trip (combine) tiles whose valid slots are not a
+      prefix.
+
+    Row layout (all native-endian, matching :class:`RecordCodec`):
+
+    ``[valid u8?][meta int32 x len(meta)][payload bytes][zero pad]``
+
+    ``meta`` names are free-form (the shuffles use ``bucket``/``src``/
+    ``pos``); each is one int32 column. Rows are padded to at least
+    ``COUNT_NBYTES`` in positional mode so the count header fits.
+    """
+
+    payload_dtype: str
+    payload_shape: Tuple[int, ...]   # trailing shape of one record
+    meta: Tuple[str, ...] = ()
+    explicit_valid: bool = False
+
+    # -- geometry -------------------------------------------------------------
+    @property
+    def payload_nbytes(self) -> int:
+        return int(np.dtype(self.payload_dtype).itemsize
+                   * np.prod(self.payload_shape, dtype=np.int64))
+
+    @property
+    def meta_nbytes(self) -> int:
+        return 4 * len(self.meta)
+
+    @property
+    def row_nbytes(self) -> int:
+        base = ((1 if self.explicit_valid else 0)
+                + self.meta_nbytes + self.payload_nbytes)
+        # positional mode prepends a count header row -> rows must fit it
+        return base if self.explicit_valid else max(base, COUNT_NBYTES)
+
+    def tile_nbytes(self, capacity: int) -> int:
+        """Wire bytes of one destination tile at ``capacity`` slots (incl.
+        the count header row in positional mode)."""
+        rows = capacity if self.explicit_valid else capacity + 1
+        return rows * self.row_nbytes
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def for_payload(cls, payload: Any, meta: Sequence[str] = (),
+                    explicit_valid: bool = False) -> "WireFrame":
+        """Infer the payload schema from an array with a leading record
+        axis (works on tracers)."""
+        return cls(payload_dtype=str(np.dtype(payload.dtype)),
+                   payload_shape=tuple(payload.shape[1:]),
+                   meta=tuple(meta), explicit_valid=explicit_valid)
+
+    # -- framing (jax, traceable) ---------------------------------------------
+    def frame_rows(self, payload: jax.Array, valid: Optional[jax.Array] = None,
+                   **meta: jax.Array) -> jax.Array:
+        """(n, *payload_shape) + per-record metadata -> (n, row_nbytes) uint8.
+
+        ``valid`` is required iff ``explicit_valid``; rows with
+        ``valid == False`` are zeroed entirely (their valid byte reads 0 and
+        no payload bytes leak onto the wire)."""
+        if set(meta) != set(self.meta):
+            raise ValueError(f"frame meta {sorted(meta)} != schema "
+                             f"{sorted(self.meta)}")
+        if self.explicit_valid == (valid is None):
+            raise ValueError("valid= required iff explicit_valid")
+        n = payload.shape[0]
+        cols = []
+        if self.explicit_valid:
+            cols.append(valid.astype(jnp.uint8).reshape(n, 1))
+        for name in self.meta:
+            m = jnp.asarray(meta[name], jnp.int32).reshape(n)
+            cols.append(jax.lax.bitcast_convert_type(m, jnp.uint8))
+        x = payload
+        if x.dtype == jnp.bool_:
+            x = x.astype(jnp.uint8)
+        cols.append(jax.lax.bitcast_convert_type(x, jnp.uint8)
+                    .reshape(n, self.payload_nbytes))
+        used = sum(c.shape[1] for c in cols)
+        if used < self.row_nbytes:
+            cols.append(jnp.zeros((n, self.row_nbytes - used), jnp.uint8))
+        rows = jnp.concatenate(cols, axis=1)
+        if self.explicit_valid:
+            rows = rows * valid.astype(jnp.uint8).reshape(n, 1)
+        return rows
+
+    def open_rows(self, rows: jax.Array):
+        """(..., row_nbytes) uint8 -> (payload, valid_or_None, {meta}).
+
+        Accepts any leading dims (e.g. a ``(num_src, capacity)`` receive
+        tile). ``valid`` is decoded only in explicit mode — positional-mode
+        callers derive it from the tile counts via :meth:`open`."""
+        if rows.shape[-1] != self.row_nbytes:
+            raise ValueError(f"rows are {rows.shape[-1]} bytes, frame "
+                             f"expects {self.row_nbytes}")
+        lead = rows.shape[:-1]
+        off = 0
+        valid = None
+        if self.explicit_valid:
+            valid = jax.lax.slice_in_dim(rows, 0, 1, axis=-1)
+            valid = valid.reshape(lead) != 0
+            off = 1
+        metas = {}
+        for name in self.meta:
+            piece = jax.lax.slice_in_dim(rows, off, off + 4, axis=-1)
+            metas[name] = jax.lax.bitcast_convert_type(piece, jnp.int32)
+            off += 4
+        dtype = np.dtype(self.payload_dtype)
+        piece = jax.lax.slice_in_dim(rows, off, off + self.payload_nbytes,
+                                     axis=-1)
+        if dtype.itemsize > 1:
+            piece = piece.reshape(lead + self.payload_shape
+                                  + (dtype.itemsize,))
+            payload = jax.lax.bitcast_convert_type(piece, dtype)
+        else:
+            piece = piece.reshape(lead + self.payload_shape)
+            payload = (piece != 0 if dtype == np.bool_
+                       else jax.lax.bitcast_convert_type(piece, dtype))
+        return payload, valid, metas
+
+    # -- tile sealing (positional-validity mode) ------------------------------
+    def seal(self, tiles: jax.Array, counts: jax.Array) -> jax.Array:
+        """Prepend the count header row: (D, C, row) + (D,) int32 counts ->
+        (D, C+1, row) wire tensor. ``counts`` must already be clamped to C
+        (``partition_pack``'s prefix contract: tile d's real records occupy
+        slots [0, counts[d]))."""
+        if self.explicit_valid:
+            raise ValueError("seal() is for positional-validity frames")
+        d = tiles.shape[0]
+        cb = jax.lax.bitcast_convert_type(counts.astype(jnp.int32),
+                                          jnp.uint8)          # (D, 4)
+        hdr = jnp.zeros((d, self.row_nbytes), jnp.uint8)
+        hdr = jax.lax.dynamic_update_slice_in_dim(hdr, cb, 0, axis=1)
+        return jnp.concatenate([hdr[:, None, :], tiles], axis=1)
+
+    def open(self, wire: jax.Array):
+        """Inverse of :meth:`seal` after the exchange: (D, C+1, row) ->
+        (payload (D, C, *shape), valid (D, C) bool, {meta (D, C) int32})."""
+        if self.explicit_valid:
+            raise ValueError("open() is for positional-validity frames")
+        hdr = jax.lax.index_in_dim(wire, 0, axis=1, keepdims=False)
+        counts = jax.lax.bitcast_convert_type(
+            jax.lax.slice_in_dim(hdr, 0, COUNT_NBYTES, axis=-1), jnp.int32)
+        rows = jax.lax.slice_in_dim(wire, 1, wire.shape[1], axis=1)
+        cap = rows.shape[1]
+        counts = jnp.clip(counts, 0, cap)
+        valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < counts[:, None]
+        payload, _, metas = self.open_rows(rows)
+        return payload, valid, metas

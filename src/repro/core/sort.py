@@ -98,6 +98,7 @@ def terasort(
     use_pallas: bool = True,
     buckets_per_device: int = 1,
     plan: Optional[ShufflePlan] = None,
+    chunks: Optional[int] = None,
 ) -> SortResult:
     """Globally sort (keys, payload) sharded over ``axis``.
 
@@ -112,7 +113,10 @@ def terasort(
     count drive the sharding specs and splitters. ``use_pallas`` governs the
     stage-2 sort kernel independently of ``plan.use_pallas`` (which governs
     the shuffle histogram) — the kernel-vs-oracle parity benchmark relies on
-    switching them separately.
+    switching them separately. ``chunks`` sets the shuffle pipeline depth:
+    W interleaved pack/exchange rounds per hop (see
+    :func:`repro.core.shuffle.sphere_shuffle`); ``None`` defers to
+    ``plan.chunks`` (or 1).
 
     .. deprecated:: thin shim — build the pipeline directly with
        ``Dataflow.source().sort(...)`` and an executor; a pipeline object
@@ -136,7 +140,8 @@ def terasort(
     df = Dataflow.source().sort(key=lambda r: r["key"], splitters=splitters,
                                 num_buckets=num_buckets,
                                 capacity_factor=capacity_factor)
-    ex = SPMDExecutor(mesh, axes=axes, plan=plan, use_pallas=use_pallas)
+    ex = SPMDExecutor(mesh, axes=axes, plan=plan, use_pallas=use_pallas,
+                      chunks=chunks)
     res = ex.run(df, {"key": keys.astype(jnp.int32),
                       "payload": payload})
     return SortResult(keys=res.records["key"], payload=res.records["payload"],

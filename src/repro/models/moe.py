@@ -168,13 +168,16 @@ def _moe_sphere_local(params_local, x_local, cfg: ModelConfig,
 
 def moe_apply_sphere(params, x, cfg: ModelConfig, mesh: Mesh,
                      dp_axes: Sequence[str], tp_axis: str = "model",
-                     ep_axes: Optional[Sequence[str]] = None):
+                     ep_axes: Optional[Sequence[str]] = None,
+                     chunks: int = 1):
     """x: (B, S, d) with S divisible by the tp axis size.
 
     ``ep_axes=(dc_axis, node_axis)`` spreads the experts over *both* axes —
     wide-area expert parallelism, with tokens crossing the DC boundary via
     the hierarchical two-level shuffle (batch shards over the dc axis,
-    sequence over the node axis).
+    sequence over the node axis). ``chunks=W`` pipelines the dispatch
+    shuffle: the token stream splits into W chunks whose partition/pack
+    overlaps the previous chunk's all_to_all (send-buffer memory drops ~W×).
     """
     b, s, d = x.shape
     k = cfg.top_k
@@ -192,7 +195,7 @@ def moe_apply_sphere(params, x, cfg: ModelConfig, mesh: Mesh,
         x_spec = P(dp, tp_axis, None)
         w_spec = P(tp_axis, None, None)
     plan = ShufflePlan.for_mesh(mesh, padded_experts(cfg, ep), n_local * k,
-                                cfg.capacity_factor, ep_axes)
+                                cfg.capacity_factor, ep_axes, chunks=chunks)
 
     def body(p, xin):
         out, aux, dropped = _moe_sphere_local(p, xin, cfg, plan)
@@ -246,7 +249,7 @@ def moe_apply_dense(params, x, cfg: ModelConfig):
 
 def moe_apply(params, x, cfg: ModelConfig, mesh: Optional[Mesh] = None,
               dp_axes: Sequence[str] = ("data",), tp_axis: str = "model",
-              ep_axes: Optional[Sequence[str]] = None):
+              ep_axes: Optional[Sequence[str]] = None, chunks: int = 1):
     """Select implementation: sphere bucket shuffle when the sequence can be
     sharded over the expert axis, dense einsum otherwise. ``ep_axes``
     requests wide-area (two-level) expert parallelism over a (dc, node)
@@ -263,12 +266,13 @@ def moe_apply(params, x, cfg: ModelConfig, mesh: Optional[Mesh] = None,
         if (cfg.moe_impl == "sphere" and x.shape[0] % dcs == 0
                 and x.shape[1] % nodes == 0 and dcs * nodes > 1):
             return moe_apply_sphere(params, x, cfg, mesh, dp_axes, tp_axis,
-                                    ep_axes=ep_axes)
+                                    ep_axes=ep_axes, chunks=chunks)
     use_sphere = (
         cfg.moe_impl == "sphere" and mesh is not None
         and tp_axis in mesh.shape and x.shape[1] % mesh.shape[tp_axis] == 0
         and mesh.shape[tp_axis] > 1
     )
     if use_sphere:
-        return moe_apply_sphere(params, x, cfg, mesh, dp_axes, tp_axis)
+        return moe_apply_sphere(params, x, cfg, mesh, dp_axes, tp_axis,
+                                chunks=chunks)
     return moe_apply_dense(params, x, cfg)

@@ -57,6 +57,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -85,6 +86,7 @@ class ShuffleStage:
     by: Callable
     num_buckets: Optional[int] = None
     capacity_factor: float = 4.0
+    chunks: Optional[int] = None          # None -> executor default
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -98,6 +100,7 @@ class SortStage:
     splitters: Optional[Any] = None       # (num_buckets - 1,) int32 thresholds
     num_buckets: Optional[int] = None
     capacity_factor: float = 2.0
+    chunks: Optional[int] = None          # None -> executor default
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -123,17 +126,20 @@ class Dataflow:
         return self._with(MapStage(fn))
 
     def shuffle(self, by: Callable, num_buckets: Optional[int] = None,
-                capacity_factor: float = 4.0) -> "Dataflow":
-        return self._with(ShuffleStage(by, num_buckets, capacity_factor))
+                capacity_factor: float = 4.0,
+                chunks: Optional[int] = None) -> "Dataflow":
+        return self._with(ShuffleStage(by, num_buckets, capacity_factor,
+                                       chunks))
 
     def reduce(self, fn: Callable) -> "Dataflow":
         return self._with(ReduceStage(fn))
 
     def sort(self, key: Callable, splitters: Optional[Any] = None,
              num_buckets: Optional[int] = None,
-             capacity_factor: float = 2.0) -> "Dataflow":
+             capacity_factor: float = 2.0,
+             chunks: Optional[int] = None) -> "Dataflow":
         return self._with(SortStage(key, splitters, num_buckets,
-                                    capacity_factor))
+                                    capacity_factor, chunks))
 
     def describe(self) -> str:
         parts = ["source"]
@@ -194,20 +200,43 @@ class SPMDExecutor:
     All stages fuse into a single ``jit(shard_map(...))``: per-device UDFs
     inline, shuffles as capacity-bounded collectives over ``axes`` (one axis
     = flat ``all_to_all``; a ``(dc, node)`` pair or a hierarchical ``plan`` =
-    the two-level wide-area path). Compiled programs are cached on
-    (pipeline identity, plan, input shapes/dtypes), so re-running the same
-    pipeline object on same-shaped data costs zero retracing.
+    the two-level wide-area path). Every shuffle hop ships exactly one
+    fused wire tensor (``wire_meta="min"`` — the executor regroups from the
+    records themselves, so no per-record metadata rides the wire), and
+    ``chunks`` sets the pipeline depth of every hop (``None`` defers to the
+    explicit ``plan``'s chunks, or 1; a per-stage ``chunks`` overrides
+    both). Compiled programs are cached on (pipeline identity, plan, input
+    shapes/dtypes) in an LRU bounded by ``cache_size``, so re-running the
+    same pipeline object on same-shaped data costs zero retracing while
+    long-lived executors cannot accumulate compiled programs without bound.
+
+    ``debug_checks`` (on by default) validates, after each run of a
+    pipeline containing a sort, that no real record key collided with the
+    reserved ``INT32_MAX`` padding sentinel — such keys would silently be
+    treated as padding by the segmented stage-2 sort. The check costs one
+    scalar device sync per run; pass ``debug_checks=False`` to skip it.
     """
 
     def __init__(self, mesh: Mesh, axes: Sequence[str] = ("data",),
                  plan: Optional[ShufflePlan] = None,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 chunks: Optional[int] = None,
+                 cache_size: int = 32,
+                 debug_checks: bool = True):
         self.mesh = mesh
         self.plan = plan
         self.axes = tuple(plan.axes) if plan is not None else tuple(
             (axes,) if isinstance(axes, str) else axes)
         self.use_pallas = use_pallas
-        self._cache: Dict[Any, Tuple[Dataflow, Callable]] = {}
+        self.chunks = chunks
+        self.cache_size = cache_size
+        self.debug_checks = debug_checks
+        # LRU keyed on (pipeline id, plan, shapes/dtypes). Entries hold a
+        # strong ref to the pipeline: while cached, its id() cannot be
+        # reused by a new object, so an id-keyed hit is always the same
+        # pipeline; eviction drops the ref together with the entry.
+        self._cache: "OrderedDict[Any, Tuple[Dataflow, Callable, bool]]" = \
+            OrderedDict()
 
     @property
     def axis_size(self) -> int:
@@ -229,15 +258,27 @@ class SPMDExecutor:
         if valid is None:
             valid = jnp.ones((n,), jnp.bool_)
         leaves = jax.tree.leaves(records)
-        key = (id(pipeline), self.plan,
+        key = (id(pipeline), self.plan, self.chunks,
                jax.tree.structure(records),
                tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
         entry = self._cache.get(key)
         if entry is None:
             fn = self._lower(pipeline)
-            # keep a strong ref to the pipeline so its id() stays unique
-            self._cache[key] = entry = (pipeline, fn)
-        out_records, out_valid, dropped = entry[1](records, valid)
+            has_sort = any(isinstance(s, SortStage) for s in pipeline.stages)
+            self._cache[key] = entry = (pipeline, fn, has_sort)
+            if len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(key)
+        out_records, out_valid, dropped, sentinel_hits = entry[1](records,
+                                                                 valid)
+        if self.debug_checks and entry[2] and int(sentinel_hits) > 0:
+            raise ValueError(
+                f"{int(sentinel_hits)} record key(s) equal INT32_MAX, which "
+                f"is reserved as the stage-2 sort padding sentinel — they "
+                f"would be silently treated as padding. Rescale the sort "
+                f"keys below 2**31-1 (or pass debug_checks=False to accept "
+                f"the old silent behaviour).")
         return DataflowResult(records=out_records, valid=out_valid,
                               dropped=dropped)
 
@@ -249,6 +290,7 @@ class SPMDExecutor:
         def local(records, valid):
             valid = valid.reshape(-1)
             dropped = jnp.zeros((), jnp.int32)
+            sentinel = jnp.zeros((), jnp.int32)
             for stage in df.stages:
                 if isinstance(stage, MapStage):
                     records = stage.fn(records)
@@ -265,37 +307,51 @@ class SPMDExecutor:
                     ids = jnp.asarray(stage.by(records)).reshape(-1)
                     records, valid, d, _ = self._exchange(
                         records, valid, ids, stage.num_buckets,
-                        stage.capacity_factor)
+                        stage.capacity_factor, stage.chunks)
                     dropped += d
                 elif isinstance(stage, SortStage):
-                    records, valid, d = self._sort(records, valid, stage)
+                    records, valid, d, hits = self._sort(records, valid,
+                                                         stage)
                     dropped += d
+                    sentinel += hits
                 else:
                     raise TypeError(f"unknown stage {stage!r}")
-            return records, valid, dropped
+            return records, valid, dropped, sentinel
 
         mapped = shard_map(local, mesh=self.mesh, in_specs=(spec, spec),
-                           out_specs=(spec, spec, P()), check_vma=False)
+                           out_specs=(spec, spec, P(), P()), check_vma=False)
         return jax.jit(mapped)
 
     def _stage_plan(self, num_buckets: Optional[int], n_local: int,
-                    capacity_factor: float) -> ShufflePlan:
+                    capacity_factor: float,
+                    chunks: Optional[int]) -> ShufflePlan:
+        # precedence: stage chunks > executor chunks > plan chunks > 1
+        w = chunks if chunks is not None else self.chunks
         if self.plan is not None:
             if num_buckets not in (None, self.plan.num_buckets):
                 raise ValueError(
                     f"stage wants {num_buckets} buckets but the executor "
                     f"plan has {self.plan.num_buckets}")
-            return self.plan
+            if w is None or w == self.plan.chunks:
+                return self.plan
+            return dataclasses.replace(self.plan, chunks=w)
         nb = num_buckets or self.axis_size
         return ShufflePlan.for_mesh(self.mesh, nb, n_local, capacity_factor,
-                                    self.axes, use_pallas=self.use_pallas)
+                                    self.axes, use_pallas=self.use_pallas,
+                                    chunks=1 if w is None else w)
 
-    def _exchange(self, records, valid, ids, num_buckets, capacity_factor):
-        """One bucket shuffle: pack -> plan.shuffle -> unpack."""
+    def _exchange(self, records, valid, ids, num_buckets, capacity_factor,
+                  chunks=None):
+        """One bucket shuffle: pack -> plan.shuffle -> unpack. The wire
+        carries pure payload rows (``wire_meta="min"``): every post-shuffle
+        consumer here regroups from the decoded records, so bucket/src
+        metadata would be dead bytes."""
         codec = RecordCodec.from_example(records)
         packed = codec.pack(records)
-        plan = self._stage_plan(num_buckets, packed.shape[0], capacity_factor)
-        res = plan.shuffle(packed, ids.astype(jnp.int32), valid=valid)
+        plan = self._stage_plan(num_buckets, packed.shape[0], capacity_factor,
+                                chunks)
+        res = plan.shuffle(packed, ids.astype(jnp.int32), valid=valid,
+                           wire_meta="min")
         flat = res.data.reshape(-1, codec.nbytes)
         return codec.unpack(flat), res.valid.reshape(-1), res.dropped, plan
 
@@ -316,6 +372,13 @@ class SPMDExecutor:
         share; records past a segment's capacity are dropped *and counted*
         (the same §3.5.1 bounded-skew contract as the shuffle itself —
         impossible when ``buckets_per_device == 1``).
+
+        Returns ``(records, valid, dropped, sentinel_hits)`` —
+        ``sentinel_hits`` counts real received keys equal to the reserved
+        ``_KEY_MAX`` padding sentinel (checked host-side by :meth:`run`
+        when ``debug_checks``: such keys are indistinguishable from padding
+        below, and the bitonic network's tie order is unspecified, so they
+        could silently swap places with padding slots).
         """
         nb = (self.plan.num_buckets if self.plan is not None
               else stage.num_buckets or self.axis_size)
@@ -328,11 +391,14 @@ class SPMDExecutor:
         keys = jnp.asarray(stage.key(records)).astype(jnp.int32).reshape(-1)
         bucket = jnp.searchsorted(spl, keys, side="right").astype(jnp.int32)
         records, valid, dropped, plan = self._exchange(
-            records, valid, bucket, nb, stage.capacity_factor)
+            records, valid, bucket, nb, stage.capacity_factor, stage.chunks)
 
         # stage 2: bucket-major regroup (O(n) partition, stable) ...
         keys = jnp.asarray(stage.key(records)).astype(jnp.int32).reshape(-1)
         skey = jnp.where(valid, keys, _KEY_MAX)  # requires real keys < KEY_MAX
+        sentinel_hits = jax.lax.psum(
+            jnp.sum((valid & (keys == _KEY_MAX)).astype(jnp.int32)),
+            plan.pmean_axes())
         r = skey.shape[0]
         bpd = plan.buckets_per_device
         seg_cap = (r if bpd == 1 else
@@ -357,7 +423,7 @@ class SPMDExecutor:
         records = jax.tree.unflatten(treedef, [
             jnp.take(t.reshape((bpd * seg_cap,) + t.shape[2:]), order, axis=0)
             for t in tiles[1:]])
-        return records, in_rng.reshape(-1), dropped
+        return records, in_rng.reshape(-1), dropped, sentinel_hits
 
 
 # -- host (Sector/SPE) executor ----------------------------------------------

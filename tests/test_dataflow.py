@@ -338,6 +338,175 @@ print("float64 map_reduce lossless:", len(got), "keys")
 """)
 
 
+def test_cross_executor_equivalence_chunked_and_hierarchical():
+    """Satellite acceptance: the inverted-index and sort pipelines produce
+    identical results on HostExecutor vs SPMDExecutor with chunks ∈ {1, 4}
+    and flat vs hierarchical plans (all on the fused one-wire-tensor
+    framing)."""
+    run_spmd("""
+import collections, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.mapreduce import default_hash, reduce_by_key_sum
+from repro.core.records import RecordCodec
+from repro.launch.train import make_sector
+from repro.sphere.dataflow import Dataflow, HostExecutor, SPMDExecutor
+from repro.sphere.spe import SPE
+
+NB = 8
+N = 8 * 128
+rng = np.random.default_rng(11)
+
+# -- inverted index ----------------------------------------------------------
+codec = RecordCodec.from_fields({"word": np.uint8, "page": np.uint8})
+def emit(rec):
+    return {"key": rec["word"].astype(jnp.int32),
+            "value": jnp.ones_like(rec["word"], jnp.int32)}
+def count(rec, valid):
+    k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+    return {"key": k, "value": v}, k >= 0, dropped
+ii = (Dataflow.source(codec)
+      .map(emit)
+      .shuffle(by=lambda r: default_hash(r["key"], NB), num_buckets=NB)
+      .reduce(count))
+pages = rng.integers(0, 26, size=(N, 2), dtype=np.uint8)
+want = dict(collections.Counter(pages[:, 0].tolist()))
+
+def counts(res):
+    rec = res.valid_records()
+    return {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
+
+root = tempfile.mkdtemp()
+master, client, daemon = make_sector(root, num_slaves=4)
+client.upload_dataset("/ii/page", [p.tobytes() for p in np.split(pages, 4)])
+daemon.run_until_stable()
+spes = [SPE(i, master.slaves[i].address, master, client.session_id)
+        for i in range(4)]
+host = counts(HostExecutor(master, client, spes).run(
+    ii, [f"/ii/page.{i:05d}" for i in range(4)]))
+assert host == want
+
+mesh1 = jax.make_mesh((8,), ("data",))
+mesh2 = jax.make_mesh((2, 4), ("dc", "node"))
+src = {"word": jnp.asarray(pages[:, 0]), "page": jnp.asarray(pages[:, 1])}
+for mesh, axes in ((mesh1, ("data",)), (mesh2, ("dc", "node"))):
+    for w in (1, 4):
+        ex = SPMDExecutor(mesh, axes=axes, chunks=w)
+        with mesh:
+            res = ex.run(ii, src)
+        assert int(res.dropped) == 0, (axes, w)
+        assert counts(res) == want, (axes, w)
+
+# -- sort --------------------------------------------------------------------
+keys = rng.integers(0, 2**31 - 2, size=N).astype(np.int32)
+payload = np.arange(N, dtype=np.int32)
+scodec = RecordCodec.from_fields({"key": np.int32, "payload": np.int32})
+# capacity_factor covers per-CHUNK skew at W=4 (capacity splits W ways, so
+# each chunk's bins see W x the relative variance)
+sdf = Dataflow.source(scodec).sort(key=lambda r: r["key"], num_buckets=8,
+                                   capacity_factor=3.0)
+
+slices = np.split(scodec.encode({"key": keys, "payload": payload}), 4)
+client.upload_dataset("/ts/in", [s.tobytes() for s in slices])
+daemon.run_until_stable()
+hres = HostExecutor(master, client, spes).run(
+    sdf, [f"/ts/in.{i:05d}" for i in range(4)])
+hkeys = hres.valid_records()["key"]
+assert (np.diff(hkeys) >= 0).all()
+
+for mesh, axes in ((mesh1, ("data",)), (mesh2, ("dc", "node"))):
+    for w in (1, 4):
+        ex = SPMDExecutor(mesh, axes=axes, chunks=w)
+        with mesh:
+            sres = ex.run(sdf, {"key": jnp.asarray(keys),
+                                "payload": jnp.asarray(payload)})
+        svr = sres.valid_records()
+        assert int(sres.dropped) == 0, (axes, w)
+        np.testing.assert_array_equal(svr["key"], hkeys, err_msg=str((axes, w)))
+        assert (keys[svr["payload"]] == svr["key"]).all(), (axes, w)
+print("cross-executor chunked/hier equivalence ok")
+""")
+
+
+def test_spmd_executor_cache_eviction():
+    """Satellite: the compile cache is a bounded LRU — it cannot grow past
+    cache_size, evicts least-recently-used first, and an evicted pipeline
+    retraces on its next run."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.sphere.dataflow import Dataflow, SPMDExecutor
+
+mesh = jax.make_mesh((8,), ("data",))
+data = {"key": jnp.arange(8 * 32, dtype=jnp.int32)}
+trace_count = [0]
+
+def make_df():
+    def bump(rec):
+        trace_count[0] += 1
+        return rec
+    return Dataflow.source().map(bump).shuffle(by=lambda r: r["key"] % 8,
+                                               num_buckets=8)
+
+ex = SPMDExecutor(mesh, cache_size=2)
+df1, df2, df3 = make_df(), make_df(), make_df()
+with mesh:
+    ex.run(df1, data)
+    ex.run(df2, data)
+    assert len(ex._cache) == 2
+    ex.run(df1, data)          # refresh df1 -> df2 becomes LRU
+    n = trace_count[0]
+    ex.run(df3, data)          # evicts df2
+    assert len(ex._cache) == 2
+    cached = [e[0] for e in ex._cache.values()]
+    assert df1 in cached and df3 in cached and df2 not in cached
+    ex.run(df1, data)          # still cached: no retrace
+    assert trace_count[0] == n + 1   # only df3's trace happened
+    ex.run(df2, data)          # evicted: must retrace
+    assert trace_count[0] == n + 2
+    assert len(ex._cache) == 2
+print("lru eviction ok")
+""")
+
+
+def test_sort_key_max_sentinel_guard():
+    """Satellite: a real key equal to INT32_MAX would silently be treated
+    as stage-2 padding; with debug_checks (the default) the executor
+    raises, and debug_checks=False restores the old silent behaviour."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.sphere.dataflow import Dataflow, SPMDExecutor
+
+mesh = jax.make_mesh((8,), ("data",))
+N = 8 * 64
+rng = np.random.default_rng(5)
+keys = rng.integers(0, 1 << 20, size=N).astype(np.int32)
+keys[7] = np.iinfo(np.int32).max          # collides with the sort sentinel
+payload = np.arange(N, dtype=np.int32)
+df = Dataflow.source().sort(key=lambda r: r["key"], num_buckets=8)
+src = {"key": jnp.asarray(keys), "payload": jnp.asarray(payload)}
+
+ex = SPMDExecutor(mesh)
+try:
+    with mesh:
+        ex.run(df, src)
+    raise AssertionError("sentinel collision was not detected")
+except ValueError as e:
+    assert "INT32_MAX" in str(e), e
+print("guard raised ok")
+
+# clean keys pass the guard (no false positive)
+keys2 = keys.copy(); keys2[7] = 0
+with mesh:
+    res = ex.run(df, {"key": jnp.asarray(keys2),
+                      "payload": jnp.asarray(payload)})
+
+# opting out restores the old silent behaviour
+loose = SPMDExecutor(mesh, debug_checks=False)
+with mesh:
+    res = loose.run(df, src)    # no raise
+print("sentinel guard ok")
+""")
+
+
 def test_spmd_executor_compile_cache():
     """Re-running the same pipeline object on same-shaped data must hit the
     executor's compile cache (one entry, one trace)."""
