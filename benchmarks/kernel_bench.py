@@ -281,6 +281,16 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
 
     if json_path:
         from repro.kernels.ops import _interpret_default
+        # the streaming soak (benchmarks/streaming_bench.py) merges its
+        # stream_* trajectory points into the same file — keep them alive
+        # across kernel-bench rewrites
+        try:
+            with open(json_path) as f:
+                prior = json.load(f).get("results", {})
+            results.update({k: v for k, v in prior.items()
+                            if k.startswith("stream_") and k not in results})
+        except (OSError, ValueError):
+            pass
         payload = {
             "schema": "repro.kernel_bench.v1",
             "backend": jax.default_backend(),

@@ -14,15 +14,16 @@ import traceback
 def main() -> None:
     from benchmarks import (kernel_bench, moe_dispatch, roofline,
                             scalability, sdss_distribution, storage_modes,
-                            terasort, wan_shuffle)
+                            streaming_bench, terasort, wan_shuffle)
     sections = {
         "terasort": terasort.run,            # paper Table 1
         "wan_shuffle": wan_shuffle.run,      # §2.2 wide-area shuffle
-        "sdss": sdss_distribution.run,       # paper Figs 4-5
+        "sdss": sdss_distribution.run,       # paper Figs 4-5 + stream demo
         "scalability": scalability.run,      # §3.5.2 claims
         "storage": storage_modes.run,        # paper Table 2 (files vs blocks)
         "moe_dispatch": moe_dispatch.run,    # §3.6 generalization
         "kernels": kernel_bench.run,
+        "streaming": streaming_bench.run,    # §3.2 continuous micro-batches
         "roofline": roofline.run,            # dry-run aggregation
     }
     want = sys.argv[1:] or list(sections)

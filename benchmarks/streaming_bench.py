@@ -1,0 +1,302 @@
+"""Streaming soak harness: one compiled pipeline, many tenants, sustained
+micro-batch traffic (the ROADMAP's "millions of users" scenario in
+miniature).
+
+The soak runs a carried word-count ``Dataflow.stream_source()`` pipeline on
+the :class:`repro.sphere.streaming.StreamExecutor` for >= 20 micro-batches
+with 3 tenants at weights 1:3:4, all permanently backlogged (bounded queues,
+rejections counted as backpressure), one request with a deliberately tiny
+deadline (timeout -> head-requeue -> delivery, exactly once) and one injected
+batch loss (dispatch failure -> requeue -> delivery, exactly once). The queue
+runs on a virtual step clock so timeout behaviour is deterministic;
+throughput is wall-clock over the compiled ``inner.run`` calls.
+
+``--check`` asserts the ISSUE-6 acceptance criteria:
+
+- zero recompiles after warm-up (``SPMDExecutor.cache_info().misses == 1``
+  over the whole soak);
+- weighted fair share within 10% of the 1:3:4 configured weights;
+- the timed-out request was requeued and delivered exactly once (and so was
+  every other request — no loss, no duplicates);
+- the streamed output (final carry snapshot) is multiset-identical to the
+  one-shot batch run over the concatenation of everything delivered;
+
+and merges ``stream_records_per_s`` + ``stream_p99_latency`` into
+``BENCH_kernels.json`` (without clobbering the kernel rows).
+
+Run:  PYTHONPATH=src python benchmarks/streaming_bench.py [--check] [--json P]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:        # standalone: give the soak 8 devices
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import collections
+import json
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VOCAB = 64
+NUM_BUCKETS = 8
+# weights sum to 8 = requests per micro-batch, so one DRR round exactly
+# fills a batch and the measured share converges to the weights quickly
+WEIGHTS = {"free": 1.0, "pro": 3.0, "enterprise": 4.0}
+DEPTH_TARGET = 12
+
+
+def _build_pipeline():
+    from repro.core.mapreduce import default_hash, reduce_by_key_sum
+    from repro.sphere.dataflow import Dataflow
+
+    def emit(rec):
+        return {"key": rec["word"].astype(jnp.int32),
+                "value": jnp.ones_like(rec["word"], jnp.int32)}
+
+    def count(rec, valid):
+        k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+        return {"key": k, "value": v}, k >= 0, dropped
+
+    return (Dataflow.stream_source()
+            .map(emit)
+            .shuffle(by=lambda r: default_hash(r["key"], NUM_BUCKETS),
+                     num_buckets=NUM_BUCKETS)
+            .reduce(count))
+
+
+def soak(steps: int = 28) -> Dict[str, object]:
+    from repro.sphere.dataflow import SPMDExecutor
+    from repro.sphere.streaming import QueueFull, StreamExecutor, TenantQueue
+
+    ndev = len(jax.devices())
+    micro_batch = 64 * ndev
+    cost = micro_batch // 8               # 8 requests fill one batch
+    mesh = jax.make_mesh((ndev,), ("data",))
+    inner = SPMDExecutor(mesh)
+    queue = TenantQueue(quantum=float(cost), capacity=DEPTH_TARGET,
+                        max_requeues=5)
+    for name, w in WEIGHTS.items():
+        queue.register(name, weight=w)
+    # virtual step clock: deterministic deadlines; throughput stays wall-time
+    vclock = {"now": 0.0}
+    ex = StreamExecutor(inner, _build_pipeline(), micro_batch=micro_batch,
+                        carry_capacity=VOCAB, queue=queue,
+                        clock=lambda: vclock["now"])
+
+    rng = np.random.default_rng(0)
+
+    def make_request():
+        return {"word": rng.integers(0, VOCAB, size=cost).astype(np.uint8)}
+
+    delivered_count: collections.Counter = collections.Counter()
+    delivered_payloads: Dict[int, np.ndarray] = {}
+    rejections = 0
+    special = None
+    dropped = 0
+
+    def top_up():
+        nonlocal rejections
+        for name in WEIGHTS:
+            for _ in range(DEPTH_TARGET + 2):   # +2 overshoots: exercises
+                try:                            # bounded-queue backpressure
+                    ex.submit(make_request(), tenant=name)
+                except QueueFull:
+                    rejections += 1
+                    break
+
+    def record(batch):
+        nonlocal dropped
+        if batch is None:
+            return
+        dropped += batch.dropped
+        for tk in batch.delivered:
+            delivered_count[tk.req_id] += 1
+            delivered_payloads[tk.req_id] = tk.payload["word"]
+
+    for step in range(steps):
+        vclock["now"] = float(step)
+        if step == 3:
+            # deadline shorter than one queue drain: times out while queued,
+            # gets head-requeued, must still be delivered exactly once
+            # (submitted before top_up so the bounded queue has room)
+            special = ex.submit(make_request(), tenant="enterprise",
+                                timeout=1.5)
+        top_up()
+        if step == 6:
+            ex._fail_next_batch = True          # simulated lost batch
+        record(ex.step())
+    fair = {n: s["records_served"]
+            for n, s in queue.stats().items()}  # measured while backlogged
+    # drain without top-up so every admitted request is delivered
+    while queue.pending():
+        vclock["now"] += 1.0
+        record(ex.step())
+
+    stats = ex.stats()
+    tstats = stats["tenants"]
+    total = sum(fair.values())
+    wsum = sum(WEIGHTS.values())
+    fair_rel = {n: (fair[n] / total) / (WEIGHTS[n] / wsum) for n in WEIGHTS}
+    sec_per_step = stats["run_seconds"] / max(stats["steps"], 1)
+    lat_steps = [tstats[n]["latency_p99"] for n in WEIGHTS]
+    p99_steps = max(lat_steps)
+    p50_steps = max(tstats[n]["latency_p50"] for n in WEIGHTS)
+
+    # stream/batch equivalence: final carry snapshot vs a one-shot run over
+    # the concatenation of every delivered request
+    snap = ex.carry_state()
+    got = {int(k): int(v) for k, v in zip(snap["key"], snap["value"])}
+    allwords = np.concatenate([delivered_payloads[i]
+                               for i in sorted(delivered_payloads)])
+    oneshot = SPMDExecutor(mesh)
+    with mesh:
+        res = oneshot.run(_build_pipeline(), {"word": jnp.asarray(allwords)})
+    rec = res.valid_records()
+    want = {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
+
+    info = inner.cache_info()
+    return {
+        "ndev": ndev,
+        "micro_batch": micro_batch,
+        "tenants": len(WEIGHTS),
+        "steps": stats["steps"],
+        "records_in": stats["records_in"],
+        "records_per_s": stats["records_per_s"],
+        "run_seconds": stats["run_seconds"],
+        "p50_latency_ms": p50_steps * sec_per_step * 1e3,
+        "p99_latency_ms": p99_steps * sec_per_step * 1e3,
+        "latency_unit_note": "queue latencies measured in micro-batch steps,"
+                             " converted at the mean batch wall time",
+        "fair_share_rel": fair_rel,
+        "cache": info._asdict(),
+        "backpressure_rejections": rejections,
+        "batch_failures": stats["batch_failures"],
+        "timeouts": sum(t["timeouts"] for t in tstats.values()),
+        "requeues": sum(t["requeues"] for t in tstats.values()),
+        "failed": sum(t["failed"] for t in tstats.values()),
+        "special_req_id": None if special is None else special.req_id,
+        "special_deliveries": (0 if special is None
+                               else delivered_count[special.req_id]),
+        "special_requeues": 0 if special is None else special.requeues,
+        "max_deliveries_per_request": max(delivered_count.values()),
+        "delivered_requests": len(delivered_count),
+        "dropped": dropped,
+        "stream_equals_batch": got == want,
+    }
+
+
+def check(res: Dict[str, object]) -> List[str]:
+    failures = []
+    if res["tenants"] < 3 or res["steps"] < 20:
+        failures.append(f"soak too small: {res['tenants']} tenants over "
+                        f"{res['steps']} micro-batches (need >=3 over >=20)")
+    if res["cache"]["misses"] != 1:
+        failures.append(f"pipeline recompiled after warm-up: "
+                        f"{res['cache']['misses']} cache misses (want 1)")
+    for name, rel in res["fair_share_rel"].items():
+        if not 0.9 <= rel <= 1.1:
+            failures.append(f"fair share off for {name}: {rel:.3f}x of the "
+                            f"configured weight (want within 10%)")
+    if res["special_requeues"] < 1 or res["special_deliveries"] != 1:
+        failures.append(f"timed-out request not requeued-then-delivered-once "
+                        f"(requeues={res['special_requeues']}, "
+                        f"deliveries={res['special_deliveries']})")
+    if res["max_deliveries_per_request"] != 1:
+        failures.append(f"duplicate delivery: a request completed "
+                        f"{res['max_deliveries_per_request']} times")
+    if res["failed"] or res["dropped"]:
+        failures.append(f"lost work: {res['failed']} failed requests, "
+                        f"{res['dropped']} dropped records")
+    if not res["stream_equals_batch"]:
+        failures.append("streamed snapshot != one-shot batch run multiset")
+    return failures
+
+
+def _merge_json(json_path: str, res: Dict[str, object]) -> None:
+    try:
+        with open(json_path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        payload = {"schema": "repro.kernel_bench.v1", "results": {}}
+    payload.setdefault("results", {})
+    payload["results"]["stream_records_per_s"] = {
+        "value": res["records_per_s"], "micro_batch": res["micro_batch"],
+        "tenants": res["tenants"], "steps": res["steps"],
+        "ndev": res["ndev"],
+    }
+    payload["results"]["stream_p99_latency"] = {
+        "ms": res["p99_latency_ms"], "p50_ms": res["p50_latency_ms"],
+        "note": res["latency_unit_note"],
+    }
+    payload["results"]["stream_soak"] = {
+        "fair_share_rel": res["fair_share_rel"],
+        "cache_misses": res["cache"]["misses"],
+        "timeouts": res["timeouts"], "requeues": res["requeues"],
+        "backpressure_rejections": res["backpressure_rejections"],
+        "stream_equals_batch": res["stream_equals_batch"],
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def run(csv: bool = True, json_path: str | None = None) -> List[str]:
+    res = soak()
+    us = res["run_seconds"] * 1e6 / res["steps"] if "run_seconds" in res \
+        else 0.0
+    fair = " ".join(f"{n}={v:.3f}" for n, v in res["fair_share_rel"].items())
+    lines = [
+        f"stream_records_per_s,{us:.0f},{res['records_per_s']:.0f}rec/s "
+        f"({res['tenants']} tenants, {res['steps']} batches of "
+        f"{res['micro_batch']}, {res['ndev']} devices)",
+        f"stream_p99_latency,0,p50={res['p50_latency_ms']:.1f}ms "
+        f"p99={res['p99_latency_ms']:.1f}ms (queue-wait, step-converted)",
+        f"stream_fair_share,0,{fair} (rel to weights 1:3:4)",
+        f"stream_soak,0,misses={res['cache']['misses']} "
+        f"timeouts={res['timeouts']} requeues={res['requeues']} "
+        f"backpressure={res['backpressure_rejections']} "
+        f"equal_to_batch={res['stream_equals_batch']}",
+    ]
+    if json_path:
+        _merge_json(json_path, res)
+        lines.append(f"stream_bench_json,0,merged into {json_path}")
+    run.last_result = res
+    return lines
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    do_check = "--check" in args
+    json_path = None
+    if "--json" in args:
+        idx = args.index("--json") + 1
+        if idx >= len(args):
+            print("usage: streaming_bench.py [--json PATH] [--check]")
+            sys.exit(2)
+        json_path = args[idx]
+    elif do_check:
+        json_path = "BENCH_kernels.json"
+    for line in run(json_path=json_path):
+        print(line)
+    if do_check:
+        res = run.last_result
+        failures = check(res)
+        if failures:
+            for msg in failures:
+                print(f"CHECK FAILED: {msg}")
+            sys.exit(1)
+        print(f"CHECK OK: {res['tenants']} tenants x {res['steps']} "
+              f"micro-batches on one compiled pipeline "
+              f"(misses={res['cache']['misses']}); fair share within 10%; "
+              f"timed-out request requeued and delivered exactly once; "
+              f"stream == batch multiset")
+
+
+if __name__ == "__main__":
+    main()

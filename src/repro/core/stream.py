@@ -21,6 +21,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 #: Paper defaults for segment sizing (§3.5.1), in records here rather than MB.
@@ -79,6 +80,29 @@ class SphereStream:
         return SphereStream(data=data, valid=valid,
                             segment_table=self.segment_table,
                             codec=self.codec)
+
+    # -- micro-batching --------------------------------------------------------
+    def micro_batches(self, batch_records: int,
+                      drop_remainder: bool = False):
+        """Yield the stream as dense numpy record chunks of at most
+        ``batch_records`` rows — the micro-batch source for
+        :meth:`repro.sphere.streaming.StreamExecutor.submit` (paper §3.2:
+        the stream *is* a sequence of segments; here each chunk becomes one
+        admission request). Rows masked out by ``valid`` are compacted away
+        first, so every yielded row is a real record."""
+        if batch_records <= 0:
+            raise ValueError(f"batch_records must be > 0, got "
+                             f"{batch_records}")
+        data = jax.tree.map(np.asarray, self.data)
+        if self.valid is not None:
+            mask = np.asarray(self.valid)
+            data = jax.tree.map(lambda a: a[mask], data)
+        n = jax.tree.leaves(data)[0].shape[0]
+        for off in range(0, n, batch_records):
+            end = min(off + batch_records, n)
+            if drop_remainder and end - off < batch_records:
+                return
+            yield jax.tree.map(lambda a: a[off:end], data)
 
     # -- segment bookkeeping ---------------------------------------------------
     @staticmethod

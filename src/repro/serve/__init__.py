@@ -1,3 +1,3 @@
-from repro.serve.engine import ServeEngine, Request
+from repro.serve.engine import Request, ServeEngine, ServeReport
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "ServeReport", "Request"]

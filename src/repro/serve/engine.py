@@ -32,11 +32,38 @@ class Request:
     frames: Optional[np.ndarray] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: multi-tenant admission (only read when the engine has a tenant
+    #: queue): which tenant the request bills to, and its queue-wait
+    #: deadline in engine steps (None = no deadline)
+    tenant: str = "default"
+    timeout: Optional[float] = None
+
+
+class ServeReport(list):
+    """``run_to_completion`` result: iterates/len()s as the list of finished
+    requests (back-compat), plus the work that did NOT finish within
+    ``max_steps`` — previously those requests were silently dropped."""
+
+    def __init__(self, done: List[Request], unfinished: List[Request]):
+        super().__init__(done)
+        self.unfinished = unfinished
+
+    @property
+    def completed(self) -> bool:
+        return not self.unfinished
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0,
+                 tenants=None):
+        """``tenants``: optional :class:`repro.sphere.streaming.TenantQueue`
+        (duck-typed). When given, the continuous-batching refill pulls from
+        it instead of the plain FIFO: slot refills follow priority classes
+        and weighted fair share, queue-waits past a request's deadline
+        requeue it (bounded retries), and ``submit`` raises
+        :class:`repro.sphere.streaming.QueueFull` as backpressure. Engine
+        time is the step counter, so deadlines are in steps."""
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -44,6 +71,9 @@ class ServeEngine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self.queue: deque[Request] = deque()
+        self.tenants = tenants
+        self.step_count = 0
+        self._tickets: Dict[int, object] = {}   # req_id -> Ticket
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros((batch_slots,), np.int32)
         self.caches = model.init_caches(batch_slots, max_len)
@@ -73,7 +103,23 @@ class ServeEngine:
         return axes
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        if self.tenants is not None:
+            tk = self.tenants.admit(req.tenant, req, cost=1,
+                                    timeout=req.timeout,
+                                    now=float(self.step_count))
+            self._tickets[req.req_id] = tk
+        else:
+            self.queue.append(req)
+
+    def _next_request(self) -> Optional[Request]:
+        if self.tenants is not None:
+            got = self.tenants.acquire(1, now=float(self.step_count))
+            return got[0].payload if got else None
+        return self.queue.popleft() if self.queue else None
+
+    def _has_pending(self) -> bool:
+        return (self.tenants.pending() > 0 if self.tenants is not None
+                else bool(self.queue))
 
     def _prefill_into_slot(self, slot: int, req: Request) -> None:
         """Feed the prompt (all but its final token) through the decode path
@@ -102,10 +148,15 @@ class ServeEngine:
     def step(self) -> List[Request]:
         """One engine iteration: refill slots, decode one token for every
         active slot, emit finished requests."""
+        self.step_count += 1
+        if self.tenants is not None:
+            self.tenants.expire(float(self.step_count))
         # refill
         for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
+            if self.active[s] is None:
+                req = self._next_request()
+                if req is None:
+                    continue
                 self.pos[s] = 0
                 self._reset_slot_cache(s)
                 self._prefill_into_slot(s, req)
@@ -144,6 +195,10 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 self.active[s] = None
+                if self.tenants is not None:
+                    tk = self._tickets.pop(req.req_id, None)
+                    if tk is not None:
+                        self.tenants.complete(tk, now=float(self.step_count))
         return finished
 
     def _reset_slot_cache(self, slot: int) -> None:
@@ -160,10 +215,19 @@ class ServeEngine:
             out.append(leaf.at[tuple(idx)].set(fill))
         self.caches = jax.tree.unflatten(treedef, out)
 
-    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+    def run_to_completion(self, max_steps: int = 10_000) -> ServeReport:
+        """Step until queue and slots drain, or ``max_steps``. The report
+        lists finished requests (it IS that list) *and* whatever was still
+        queued or mid-generation when the step budget ran out — exhausting
+        ``max_steps`` used to silently drop that in-flight work."""
         done: List[Request] = []
         for _ in range(max_steps):
             done.extend(self.step())
-            if not self.queue and not any(self.active):
+            if not self._has_pending() and not any(self.active):
                 break
-        return done
+        unfinished = [r for r in self.active if r is not None]
+        if self.tenants is not None:
+            unfinished += [tk.payload for tk in self.tenants.pending_items()]
+        else:
+            unfinished += list(self.queue)
+        return ServeReport(done, unfinished)

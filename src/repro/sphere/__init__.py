@@ -10,16 +10,21 @@ the benchmark simulations that reproduce the paper's tables.
 """
 
 from repro.sphere.scheduler import (
-    SegmentScheduler, SPEState, SegmentState, ScheduleEvent,
+    DeadlineHeap, SegmentScheduler, SPEState, SegmentState, ScheduleEvent,
 )
 from repro.sphere.spe import SPE
 from repro.sphere.engine import SphereProcess
 from repro.sphere.dataflow import (
     Dataflow, DataflowResult, HostExecutor, SPMDExecutor,
 )
+from repro.sphere.streaming import (
+    QueueFull, StreamBatch, StreamExecutor, TenantQueue, Ticket,
+)
 
 __all__ = [
-    "SegmentScheduler", "SPEState", "SegmentState", "ScheduleEvent",
+    "DeadlineHeap", "SegmentScheduler", "SPEState", "SegmentState",
+    "ScheduleEvent",
     "SPE", "SphereProcess",
     "Dataflow", "DataflowResult", "HostExecutor", "SPMDExecutor",
+    "QueueFull", "StreamBatch", "StreamExecutor", "TenantQueue", "Ticket",
 ]

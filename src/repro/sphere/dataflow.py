@@ -57,7 +57,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from collections import OrderedDict
+from collections import OrderedDict, namedtuple
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -114,13 +114,28 @@ class Dataflow:
 
     stages: Tuple[Any, ...] = ()
     codec: Optional[RecordCodec] = None
+    #: declared as a *streaming* source (``stream_source``): the stage graph
+    #: is meant to run continuously over micro-batches via
+    #: :class:`repro.sphere.streaming.StreamExecutor`. Batch executors run
+    #: it unchanged (one micro-batch == one batch).
+    stream: bool = False
 
     @classmethod
     def source(cls, codec: Optional[RecordCodec] = None) -> "Dataflow":
         return cls(stages=(), codec=codec)
 
+    @classmethod
+    def stream_source(cls, codec: Optional[RecordCodec] = None) -> "Dataflow":
+        """A continuous micro-batch source (paper §3.2: "Sphere takes
+        streams as inputs and produces streams as outputs"). The same stage
+        verbs apply; :class:`repro.sphere.streaming.StreamExecutor` runs the
+        graph over an unbounded sequence of fixed-shape micro-batches,
+        compiled once."""
+        return cls(stages=(), codec=codec, stream=True)
+
     def _with(self, stage) -> "Dataflow":
-        return Dataflow(stages=self.stages + (stage,), codec=self.codec)
+        return Dataflow(stages=self.stages + (stage,), codec=self.codec,
+                        stream=self.stream)
 
     def map(self, fn: Callable) -> "Dataflow":
         return self._with(MapStage(fn))
@@ -142,7 +157,7 @@ class Dataflow:
                                     capacity_factor, chunks))
 
     def describe(self) -> str:
-        parts = ["source"]
+        parts = ["stream-source" if self.stream else "source"]
         for st in self.stages:
             if isinstance(st, MapStage):
                 parts.append(f"map[{getattr(st.fn, '__name__', '<fn>')}]")
@@ -171,6 +186,10 @@ class DataflowResult:
     dropped: Any
     errors: Dict[Any, str] = dataclasses.field(default_factory=dict)
     retries: int = 0
+    #: streaming only: the ``(records, valid)`` cross-batch carry state the
+    #: run produced (None on one-shot runs) — feed it back as the next
+    #: micro-batch's ``carry``. See :mod:`repro.sphere.streaming`.
+    carry: Optional[Tuple[Any, Any]] = None
 
     def valid_records(self) -> Any:
         """Dense numpy view: only real records, in device/bucket order."""
@@ -189,6 +208,44 @@ def _split_reduce_out(out):
 
 def _leading(records) -> int:
     return jax.tree.leaves(records)[0].shape[0]
+
+
+def _compact_carry(records, valid, cap: int):
+    """Compress ``records[valid]`` into a fixed ``cap``-row carry buffer.
+
+    Valid rows move (stably) to the prefix; rows past ``cap`` are dropped and
+    counted — the carry is *bounded* state, the same §3.5.1 capacity contract
+    as the shuffle. Returns ``(carry_records, carry_valid, dropped)``."""
+    valid = valid.reshape(-1)
+    n = valid.shape[0]
+    if n < cap:
+        records = jax.tree.map(
+            lambda a: jnp.pad(a, ((0, cap - n),) + ((0, 0),) * (a.ndim - 1)),
+            records)
+        valid = jnp.pad(valid, (0, cap - n))
+    order = jnp.argsort(jnp.logical_not(valid), stable=True)
+    top = order[:cap].astype(jnp.int32)
+    carry = jax.tree.map(lambda a: jnp.take(a, top, axis=0), records)
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    cvalid = jnp.arange(cap, dtype=jnp.int32) < jnp.minimum(nvalid, cap)
+    dropped = jnp.maximum(nvalid - cap, 0)
+    return carry, cvalid, dropped
+
+
+def _last_reduce_index(df: Dataflow) -> int:
+    idx = [i for i, s in enumerate(df.stages) if isinstance(s, ReduceStage)]
+    if not idx:
+        raise ValueError(
+            "cross-batch carry state needs a reduce stage to merge into — "
+            f"pipeline is {df.describe()}")
+    return idx[-1]
+
+
+#: ``SPMDExecutor.cache_info()`` result, ``functools.lru_cache`` style plus
+#: an eviction counter: steady-state streaming asserts ``misses`` stops
+#: growing after warm-up (zero recompiles per micro-batch).
+CacheInfo = namedtuple("CacheInfo",
+                       ["hits", "misses", "evictions", "currsize", "maxsize"])
 
 
 # -- SPMD executor -----------------------------------------------------------
@@ -237,17 +294,37 @@ class SPMDExecutor:
         # pipeline; eviction drops the ref together with the entry.
         self._cache: "OrderedDict[Any, Tuple[Dataflow, Callable, bool]]" = \
             OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
 
     @property
     def axis_size(self) -> int:
         return math.prod(self.mesh.shape[a] for a in self.axes)
 
+    def cache_info(self) -> CacheInfo:
+        """Compile-cache counters (``functools.lru_cache`` style). A cache
+        miss means the pipeline was (re)lowered and traced — steady-state
+        streaming asserts ``misses`` is frozen after warm-up."""
+        return CacheInfo(self._hits, self._misses, self._evictions,
+                         len(self._cache), self.cache_size)
+
     def run(self, pipeline: Dataflow, records: Any,
-            valid: Optional[Any] = None) -> DataflowResult:
+            valid: Optional[Any] = None,
+            carry: Optional[Tuple[Any, Any]] = None) -> DataflowResult:
         """Execute ``pipeline`` over ``records`` sharded along ``axes``.
 
         ``records``: pytree of global arrays (or a
         :class:`repro.core.stream.SphereStream`, whose ``valid`` is used).
+
+        ``carry``: optional ``(records, valid)`` cross-batch state from the
+        previous micro-batch of a *streaming* run. It is concatenated into
+        the pipeline's **last reduce stage** input (per device — carry never
+        crosses devices, which is sound because the deterministic shuffle
+        sends a given key to the same device every batch), and the result
+        carries the reduce output back out, compacted to the same fixed
+        capacity (overflow is dropped and counted). Requires the reduce UDF
+        to be schema-preserving; see :mod:`repro.sphere.streaming`.
         """
         from repro.core.stream import SphereStream
         if isinstance(records, SphereStream):
@@ -257,21 +334,39 @@ class SPMDExecutor:
         n = _leading(records)
         if valid is None:
             valid = jnp.ones((n,), jnp.bool_)
+        if carry is not None:
+            carry = (jax.tree.map(jnp.asarray, carry[0]),
+                     jnp.asarray(carry[1]))
+            ckey = (jax.tree.structure(carry[0]),
+                    tuple((tuple(l.shape), str(l.dtype))
+                          for l in jax.tree.leaves(carry[0])),
+                    tuple(carry[1].shape))
+        else:
+            ckey = None
         leaves = jax.tree.leaves(records)
         key = (id(pipeline), self.plan, self.chunks,
                jax.tree.structure(records),
-               tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+               tuple((tuple(l.shape), str(l.dtype)) for l in leaves), ckey)
         entry = self._cache.get(key)
         if entry is None:
-            fn = self._lower(pipeline)
+            self._misses += 1
+            fn = self._lower(pipeline, with_carry=carry is not None)
             has_sort = any(isinstance(s, SortStage) for s in pipeline.stages)
             self._cache[key] = entry = (pipeline, fn, has_sort)
             if len(self._cache) > self.cache_size:
                 self._cache.popitem(last=False)
+                self._evictions += 1
         else:
+            self._hits += 1
             self._cache.move_to_end(key)
-        out_records, out_valid, dropped, sentinel_hits = entry[1](records,
-                                                                 valid)
+        if carry is not None:
+            (out_records, out_valid, dropped, sentinel_hits,
+             c_rec, c_valid) = entry[1](records, valid, carry[0], carry[1])
+            out_carry = (c_rec, c_valid)
+        else:
+            out_records, out_valid, dropped, sentinel_hits = entry[1](records,
+                                                                     valid)
+            out_carry = None
         if self.debug_checks and entry[2] and int(sentinel_hits) > 0:
             raise ValueError(
                 f"{int(sentinel_hits)} record key(s) equal INT32_MAX, which "
@@ -280,29 +375,46 @@ class SPMDExecutor:
                 f"keys below 2**31-1 (or pass debug_checks=False to accept "
                 f"the old silent behaviour).")
         return DataflowResult(records=out_records, valid=out_valid,
-                              dropped=dropped)
+                              dropped=dropped, carry=out_carry)
 
     # -- lowering -------------------------------------------------------------
-    def _lower(self, df: Dataflow) -> Callable:
+    def _lower(self, df: Dataflow, with_carry: bool = False) -> Callable:
         spec = P(self.axes[0]) if len(self.axes) == 1 else P(self.axes)
         axes = self.axes
+        carry_at = _last_reduce_index(df) if with_carry else -1
 
-        def local(records, valid):
+        def body(records, valid, carry_records, carry_valid):
             valid = valid.reshape(-1)
             dropped = jnp.zeros((), jnp.int32)
             sentinel = jnp.zeros((), jnp.int32)
-            for stage in df.stages:
+            new_carry = (None, None)
+            for i, stage in enumerate(df.stages):
                 if isinstance(stage, MapStage):
                     records = stage.fn(records)
                     if _leading(records) != valid.shape[0]:
                         valid = jnp.ones((_leading(records),), jnp.bool_)
                 elif isinstance(stage, ReduceStage):
+                    if i == carry_at:
+                        # merge last batch's aggregate into this group; the
+                        # reduce output below becomes the next batch's carry
+                        records = jax.tree.map(
+                            lambda a, c: jnp.concatenate([a, c], axis=0),
+                            records, carry_records)
+                        valid = jnp.concatenate(
+                            [valid, carry_valid.reshape(-1)])
                     records, valid, rd = _split_reduce_out(
                         stage.fn(records, valid))
                     valid = valid.reshape(-1)
                     if rd is not None:
                         dropped += jax.lax.psum(
                             jnp.asarray(rd, jnp.int32), axes)
+                    if i == carry_at:
+                        cap = carry_valid.reshape(-1).shape[0]
+                        c_rec, c_valid, c_drop = _compact_carry(
+                            records, valid, cap)
+                        new_carry = (c_rec, c_valid)
+                        dropped += jax.lax.psum(
+                            c_drop.astype(jnp.int32), axes)
                 elif isinstance(stage, ShuffleStage):
                     ids = jnp.asarray(stage.by(records)).reshape(-1)
                     records, valid, d, _ = self._exchange(
@@ -316,6 +428,23 @@ class SPMDExecutor:
                     sentinel += hits
                 else:
                     raise TypeError(f"unknown stage {stage!r}")
+            return records, valid, dropped, sentinel, new_carry
+
+        if with_carry:
+            def local(records, valid, carry_records, carry_valid):
+                records, valid, dropped, sentinel, (c_rec, c_valid) = body(
+                    records, valid, carry_records, carry_valid)
+                return records, valid, dropped, sentinel, c_rec, c_valid
+
+            mapped = shard_map(local, mesh=self.mesh,
+                               in_specs=(spec, spec, spec, spec),
+                               out_specs=(spec, spec, P(), P(), spec, spec),
+                               check_vma=False)
+            return jax.jit(mapped)
+
+        def local(records, valid):
+            records, valid, dropped, sentinel, _ = body(records, valid,
+                                                        None, None)
             return records, valid, dropped, sentinel
 
         mapped = shard_map(local, mesh=self.mesh, in_specs=(spec, spec),

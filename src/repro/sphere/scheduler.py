@@ -78,6 +78,39 @@ class ScheduleEvent:
     segment: int
 
 
+class DeadlineHeap:
+    """Min-heap of ``(deadline, item)`` with lazy invalidation — the same
+    stale-event discipline the :class:`SegmentScheduler` simulation uses for
+    its timeout events, factored out so live queues (the streaming
+    :class:`repro.sphere.streaming.TenantQueue`) can share it.
+
+    Entries are never removed eagerly: when an item's deadline is refreshed
+    (requeue) a new entry is pushed and the old one goes stale. ``pop_due``
+    hands back ``(deadline, item)`` pairs and the *caller* decides staleness
+    (typically: the recorded deadline no longer matches the item's current
+    one, or the item already left the state the deadline guarded)."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, object]] = []
+        self._seq = itertools.count()
+
+    def push(self, deadline: float, item: object) -> None:
+        heapq.heappush(self._heap, (deadline, next(self._seq), item))
+
+    def pop_due(self, now: float) -> List[Tuple[float, object]]:
+        due = []
+        while self._heap and self._heap[0][0] <= now:
+            deadline, _, item = heapq.heappop(self._heap)
+            due.append((deadline, item))
+        return due
+
+    def peek(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
 class SegmentScheduler:
     def __init__(
         self,

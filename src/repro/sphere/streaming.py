@@ -1,0 +1,551 @@
+"""Streaming Sphere: continuous micro-batch dataflow + multi-tenant admission.
+
+The paper's Sphere is a *stream* processor — "Sphere takes streams as inputs
+and produces streams as outputs" (§3.2) — but the batch executors in
+:mod:`repro.sphere.dataflow` run a pipeline exactly once. This module turns
+the same declarative stage graph into a long-lived serving loop:
+
+- :class:`StreamExecutor` runs a ``Dataflow.stream_source()`` pipeline
+  continuously over fixed-shape **micro-batches**. Every micro-batch is one
+  invocation of the same compiled ``jit(shard_map)`` program (the
+  :class:`~repro.sphere.dataflow.SPMDExecutor` LRU cache guarantees zero
+  recompiles after warm-up — asserted via ``cache_info()``), reusing the
+  one-wire-tensor shuffle path unchanged. Pipelines whose last stage is a
+  ``reduce`` keep **bounded cross-batch carry state**: the reduce output is
+  compacted into a fixed-capacity per-device buffer and merged back into the
+  next batch's reduce input, so running aggregates (word counts, top-K — a
+  reduce that emits its group's best K rows) stream forward without
+  unbounded growth. Carry never crosses devices: the deterministic shuffle
+  routes a given key to the same device every batch, so per-key state stays
+  co-located with the records that update it.
+
+- :class:`TenantQueue` is the admission layer in front of the executor:
+  per-tenant **priority classes** (strict: a class is served only when every
+  more-urgent class is empty), **weighted fair share** inside a class via
+  deficit round-robin, per-request **deadlines** with timeout/requeue
+  semantics (a request that waits past its deadline is requeued at the head
+  with a fresh deadline; after ``max_requeues`` it is reported failed — the
+  paper's §3.5.2 discard/re-pool rule, built on the scheduler module's
+  segment-state machinery), and **bounded queues** for backpressure
+  (``admit`` raises :class:`QueueFull`). Delivery is exactly-once: a ticket
+  completes at most once no matter how many requeued or speculative copies
+  finish.
+
+Carry-state contract (what a streaming ``reduce`` UDF must satisfy):
+
+1. *schema-preserving*: output records have the same pytree structure,
+   trailing shapes and dtypes as the input (the output is fed back in);
+2. *merge-idempotent*: re-reducing its own output together with new records
+   gives the same aggregate as reducing everything at once
+   (``fn(out ++ new) == fn(all)`` up to row order) — true for per-key sums,
+   min/max, top-K;
+3. *bounded*: at most ``carry_capacity`` valid rows per device survive a
+   batch; overflow is dropped AND counted in ``dropped`` (§3.5.1's bounded
+   capacity contract, applied to state).
+
+The emitted stream of a carried reduce is a sequence of *snapshots*: each
+micro-batch's output is the aggregate over everything admitted so far, so
+the final snapshot equals the one-shot batch run over the concatenation —
+the stream/batch equivalence tests assert exactly that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.records import RecordCodec
+from repro.sphere.dataflow import (Dataflow, MapStage, ReduceStage,
+                                   SPMDExecutor, _last_reduce_index,
+                                   _leading, _split_reduce_out)
+from repro.sphere.scheduler import DeadlineHeap, SegStatus
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: the tenant's bounded admission queue is at capacity."""
+
+    def __init__(self, tenant: str, depth: int):
+        super().__init__(f"tenant {tenant!r} queue full ({depth} pending); "
+                         f"retry after completions drain it")
+        self.tenant = tenant
+        self.depth = depth
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One admitted request. Status reuses the scheduler's segment states:
+    PENDING = queued, RUNNING = in a dispatched micro-batch, DONE =
+    delivered (exactly once), DATA_ERROR = abandoned after max requeues."""
+
+    req_id: int
+    tenant: str
+    payload: Any
+    cost: int                          # admission-budget units (records)
+    admitted_at: float
+    timeout: Optional[float] = None
+    deadline: Optional[float] = None
+    status: SegStatus = SegStatus.PENDING
+    attempts: int = 0                  # times dispatched into a batch
+    requeues: int = 0                  # timeout / failure re-admissions
+    completed_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class TenantState:
+    name: str
+    weight: float = 1.0
+    priority: int = 0                  # lower = more urgent (strict classes)
+    capacity: int = 64                 # max queued tickets (backpressure)
+    deficit: float = 0.0               # DRR credit, persists across rounds
+    queue: "deque[Ticket]" = dataclasses.field(default_factory=deque)
+    # -- stats ---------------------------------------------------------------
+    admitted: int = 0
+    rejected: int = 0
+    delivered: int = 0
+    records_served: int = 0
+    timeouts: int = 0
+    requeues: int = 0
+    failed: int = 0
+    latencies: "deque[float]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=4096))
+
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+class TenantQueue:
+    """Multi-tenant admission queue: strict priority classes, weighted
+    deficit-round-robin fair share within a class, deadlines with
+    timeout/requeue, bounded per-tenant queues (see module docstring).
+
+    All methods take an explicit ``now`` (any monotonic unit — seconds,
+    engine steps, virtual time); omit it to use ``time.monotonic()``.
+    """
+
+    def __init__(self, quantum: float = 64.0, timeout: Optional[float] = None,
+                 max_requeues: int = 3, capacity: int = 64):
+        #: DRR credit added per round per unit weight. Any value > 0 is
+        #: fair in the long run; >= the typical request cost keeps each
+        #: acquire() pass O(tenants).
+        self.quantum = quantum
+        self.timeout = timeout          # default per-request deadline
+        self.max_requeues = max_requeues
+        self.capacity = capacity
+        self._tenants: "Dict[str, TenantState]" = {}
+        self._deadlines = DeadlineHeap()
+        self._next_id = 0
+        self._rr_offset = 0             # rotates DRR start tenant per acquire
+
+    @staticmethod
+    def _now(now: Optional[float]) -> float:
+        return time.monotonic() if now is None else now
+
+    def register(self, tenant: str, weight: float = 1.0, priority: int = 0,
+                 capacity: Optional[int] = None) -> TenantState:
+        if weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        st = self._tenants.get(tenant)
+        if st is None:
+            st = self._tenants[tenant] = TenantState(
+                tenant, weight=weight, priority=priority,
+                capacity=self.capacity if capacity is None else capacity)
+        else:
+            st.weight, st.priority = weight, priority
+            if capacity is not None:
+                st.capacity = capacity
+        return st
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, tenant: str, payload: Any, cost: int = 1,
+              timeout: Optional[float] = -1.0,
+              now: Optional[float] = None) -> Ticket:
+        """Admit one request; raises :class:`QueueFull` at capacity.
+        ``timeout`` overrides the queue default (None disables the
+        deadline; the -1.0 sentinel means "use the default")."""
+        now = self._now(now)
+        st = self._tenants.get(tenant) or self.register(tenant)
+        if len(st.queue) >= st.capacity:
+            st.rejected += 1
+            raise QueueFull(tenant, len(st.queue))
+        if timeout == -1.0:
+            timeout = self.timeout
+        tk = Ticket(req_id=self._next_id, tenant=tenant, payload=payload,
+                    cost=int(cost), admitted_at=now, timeout=timeout)
+        self._next_id += 1
+        if timeout is not None:
+            tk.deadline = now + timeout
+            self._deadlines.push(tk.deadline, tk)
+        st.queue.append(tk)
+        st.admitted += 1
+        return tk
+
+    # -- dispatch: strict priority + deficit round-robin ---------------------
+    def acquire(self, budget: int, now: Optional[float] = None
+                ) -> List[Ticket]:
+        """Pull up to ``budget`` cost units of requests for one micro-batch.
+
+        Priority classes are strict and non-bypassing: a class is only
+        served once every more-urgent class is drained, and if its head
+        request no longer fits the remaining budget, lower classes do NOT
+        fill the gap (the leftover budget is padding — fairness beats batch
+        packing). Within a class, deficit round-robin: each round every
+        backlogged tenant earns ``weight * quantum`` credit and serves
+        requests while credit and budget allow, so served cost converges to
+        the weight ratio whatever the request sizes."""
+        now = self._now(now)
+        self.expire(now)
+        taken: List[Ticket] = []
+        remaining = budget
+        self._rr_offset += 1
+        classes = sorted({t.priority for t in self._tenants.values()
+                          if t.queue})
+        for prio in classes:
+            cls = [t for t in self._tenants.values() if t.priority == prio]
+            off = self._rr_offset % len(cls)
+            cls = cls[off:] + cls[:off]
+            while remaining > 0:
+                backlog = [t for t in cls if t.queue]
+                if not backlog:
+                    break
+                if min(t.queue[0].cost for t in backlog) > remaining:
+                    remaining = 0       # strict: no bypass by lower classes
+                    break
+                for t in backlog:
+                    if not t.queue:
+                        t.deficit = 0.0
+                        continue
+                    t.deficit += t.weight * self.quantum
+                    while (t.queue and t.queue[0].cost <= t.deficit
+                           and t.queue[0].cost <= remaining):
+                        tk = t.queue.popleft()
+                        tk.status = SegStatus.RUNNING
+                        tk.attempts += 1
+                        t.deficit -= tk.cost
+                        remaining -= tk.cost
+                        taken.append(tk)
+                        if remaining <= 0:
+                            break
+                    if not t.queue:
+                        t.deficit = 0.0  # classic DRR: no credit hoarding
+                    if remaining <= 0:
+                        break
+            if remaining <= 0:
+                break
+        return taken
+
+    # -- completion / failure / expiry ---------------------------------------
+    def complete(self, ticket: Ticket, now: Optional[float] = None) -> bool:
+        """Mark delivered. Returns False (and changes nothing) if the ticket
+        already completed or failed — the exactly-once guard: late
+        completions of a requeued copy are suppressed, and a still-queued
+        duplicate is withdrawn when its twin completes first."""
+        now = self._now(now)
+        if ticket.status in (SegStatus.DONE, SegStatus.DATA_ERROR):
+            return False
+        if ticket.status == SegStatus.PENDING:
+            # completed by an earlier dispatch while its requeued copy
+            # waited — withdraw the copy so it cannot deliver again
+            try:
+                self._tenants[ticket.tenant].queue.remove(ticket)
+            except ValueError:
+                pass
+        ticket.status = SegStatus.DONE
+        ticket.completed_at = now
+        st = self._tenants[ticket.tenant]
+        st.delivered += 1
+        st.records_served += ticket.cost
+        st.latencies.append(now - ticket.admitted_at)
+        return True
+
+    def requeue(self, ticket: Ticket, now: Optional[float] = None) -> bool:
+        """Put a dispatched-but-unfinished (or timed-out) ticket back at the
+        *head* of its tenant's queue with a fresh deadline — it keeps its
+        seniority (a blown deadline escalates, it must not start over behind
+        the backlog that starved it, or it would time out forever). After
+        ``max_requeues`` the ticket is abandoned and reported (status
+        DATA_ERROR) — the paper's §3.5.2 bounded-retry rule. Returns True
+        iff the ticket is queued again."""
+        now = self._now(now)
+        if ticket.status in (SegStatus.DONE, SegStatus.DATA_ERROR):
+            return False
+        st = self._tenants[ticket.tenant]
+        if ticket.status == SegStatus.PENDING:
+            try:
+                st.queue.remove(ticket)
+            except ValueError:
+                pass
+        ticket.requeues += 1
+        st.requeues += 1
+        if ticket.requeues > self.max_requeues:
+            ticket.status = SegStatus.DATA_ERROR
+            st.failed += 1
+            return False
+        ticket.status = SegStatus.PENDING
+        if ticket.timeout is not None:
+            ticket.deadline = now + ticket.timeout
+            self._deadlines.push(ticket.deadline, ticket)
+        st.queue.appendleft(ticket)
+        return True
+
+    def expire(self, now: Optional[float] = None) -> List[Ticket]:
+        """Requeue every *queued* ticket whose deadline has passed (fresh
+        deadline, head position, ``timeouts`` counted; abandoned once
+        ``max_requeues`` is exhausted). RUNNING tickets are left alone —
+        a lost in-flight batch is the dispatcher's to report via
+        :meth:`requeue`. Returns the tickets that were requeued."""
+        now = self._now(now)
+        requeued = []
+        for deadline, tk in self._deadlines.pop_due(now):
+            if tk.status != SegStatus.PENDING or tk.deadline != deadline:
+                continue                # stale entry (refreshed or moved on)
+            self._tenants[tk.tenant].timeouts += 1
+            if self.requeue(tk, now=now):
+                requeued.append(tk)
+        return requeued
+
+    # -- introspection -------------------------------------------------------
+    def depth(self, tenant: Optional[str] = None) -> int:
+        if tenant is not None:
+            st = self._tenants.get(tenant)
+            return len(st.queue) if st else 0
+        return sum(len(t.queue) for t in self._tenants.values())
+
+    def pending(self) -> int:
+        return self.depth()
+
+    def pending_items(self) -> List[Ticket]:
+        return [tk for t in self._tenants.values() for tk in t.queue]
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant serving stats: depth, throughput counters, latency
+        percentiles (in whatever ``now`` unit the caller used)."""
+        out = {}
+        for name, t in self._tenants.items():
+            out[name] = {
+                "weight": t.weight, "priority": t.priority,
+                "queue_depth": len(t.queue), "admitted": t.admitted,
+                "delivered": t.delivered, "rejected": t.rejected,
+                "records_served": t.records_served,
+                "timeouts": t.timeouts, "requeues": t.requeues,
+                "failed": t.failed,
+                "latency_p50": _percentile(t.latencies, 50),
+                "latency_p99": _percentile(t.latencies, 99),
+            }
+        return out
+
+
+# -- streaming executor ------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamBatch:
+    """One micro-batch's emitted output (a slice of the output stream)."""
+
+    step: int
+    records: Any
+    valid: Any
+    dropped: int
+    delivered: List[Ticket]
+    requeued: List[Ticket] = dataclasses.field(default_factory=list)
+
+    def valid_records(self) -> Any:
+        v = np.asarray(self.valid)
+        return jax.tree.map(lambda a: np.asarray(a)[v], self.records)
+
+
+class StreamExecutor:
+    """Run one ``Dataflow.stream_source()`` pipeline continuously over
+    micro-batches fed by a :class:`TenantQueue` (see module docstring).
+
+    ``micro_batch`` is the global records-per-batch (divisible by the mesh
+    axis size); short batches are padded with invalid rows so every batch
+    has the same shape — the whole stream reuses ONE compiled program.
+    ``carry_capacity`` > 0 (per-device rows) enables cross-batch carry for
+    pipelines whose last reduce is schema-preserving; 0 disables carry
+    (each batch is independent, the output stream is the union of batch
+    outputs).
+    """
+
+    def __init__(self, inner: SPMDExecutor, pipeline: Dataflow,
+                 micro_batch: int, carry_capacity: int = 0,
+                 queue: Optional[TenantQueue] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        if not pipeline.stream:
+            raise ValueError(
+                "StreamExecutor needs a Dataflow.stream_source() pipeline "
+                "(got a one-shot source; batch executors run those)")
+        if micro_batch % inner.axis_size != 0:
+            raise ValueError(f"micro_batch={micro_batch} must be divisible "
+                             f"by the mesh axis size {inner.axis_size}")
+        if carry_capacity:
+            _last_reduce_index(pipeline)   # raises if there is no reduce
+        self.inner = inner
+        self.pipeline = pipeline
+        self.micro_batch = micro_batch
+        self.carry_capacity = carry_capacity
+        self.queue = queue if queue is not None else TenantQueue()
+        self._clock = clock or time.monotonic
+        self._carry: Optional[Tuple[Any, Any]] = None
+        self._codec: Optional[RecordCodec] = None
+        self._steps = 0
+        self._records_in = 0
+        self._batch_failures = 0
+        self._fail_next_batch = False   # test hook: simulate a lost batch
+        self._run_seconds = 0.0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, records: Any, tenant: str = "default",
+               timeout: Optional[float] = -1.0,
+               now: Optional[float] = None) -> Ticket:
+        """Admit one request: a record pytree (its leading dim is the cost).
+        All requests must share one schema; a request larger than a
+        micro-batch is rejected outright (it could never be dispatched)."""
+        records = jax.tree.map(np.asarray, records)
+        codec = RecordCodec.from_example(records)
+        if self._codec is None:
+            self._codec = codec
+        elif self._codec != codec:
+            raise ValueError(f"request schema {codec} differs from the "
+                             f"stream's {self._codec}")
+        cost = _leading(records)
+        if cost == 0 or cost > self.micro_batch:
+            raise ValueError(f"request of {cost} records cannot ride a "
+                             f"{self.micro_batch}-record micro-batch")
+        return self.queue.admit(tenant, records, cost=cost, timeout=timeout,
+                                now=self._now(now))
+
+    def _now(self, now: Optional[float]) -> float:
+        return self._clock() if now is None else now
+
+    # -- the continuous loop -------------------------------------------------
+    def step(self, now: Optional[float] = None) -> Optional[StreamBatch]:
+        """One micro-batch: expire deadlines, admit a fair batch, run the
+        compiled pipeline once, deliver. Returns None on an idle tick (or a
+        failed batch, whose tickets are requeued)."""
+        now = self._now(now)
+        self.queue.expire(now)
+        tickets = self.queue.acquire(self.micro_batch, now=now)
+        if not tickets:
+            return None
+        if self._fail_next_batch:       # simulated batch loss (tests/soak)
+            self._fail_next_batch = False
+            self._batch_failures += 1
+            requeued = [t for t in tickets if self.queue.requeue(t, now=now)]
+            return StreamBatch(step=self._steps, records=None,
+                               valid=np.zeros((0,), bool), dropped=0,
+                               delivered=[], requeued=requeued)
+        batch, valid, n = self._assemble(tickets)
+        if self.carry_capacity and self._carry is None:
+            self._carry = self._init_carry(batch, valid)
+        t0 = time.monotonic()
+        with self.inner.mesh:
+            res = self.inner.run(self.pipeline, batch, valid=valid,
+                                 carry=self._carry)
+        dropped = int(res.dropped)
+        self._run_seconds += time.monotonic() - t0
+        if self.carry_capacity:
+            self._carry = res.carry
+        self._steps += 1
+        self._records_in += n
+        delivered = [t for t in tickets if self.queue.complete(t, now=now)]
+        return StreamBatch(step=self._steps, records=res.records,
+                           valid=res.valid, dropped=dropped,
+                           delivered=delivered)
+
+    def drain(self, max_steps: int = 10_000) -> List[StreamBatch]:
+        """Step until the admission queue is empty (or ``max_steps``)."""
+        out = []
+        while self.queue.pending() and max_steps > 0:
+            b = self.step()
+            if b is not None:
+                out.append(b)
+            max_steps -= 1
+        return out
+
+    # -- batch assembly / carry ----------------------------------------------
+    def _assemble(self, tickets: Sequence[Ticket]):
+        rows = [t.payload for t in tickets]
+        n = sum(t.cost for t in tickets)
+        pad = self.micro_batch - n
+        merged = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *rows)
+        if pad:
+            merged = jax.tree.map(
+                lambda a: np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)], axis=0),
+                merged)
+        valid = np.zeros((self.micro_batch,), bool)
+        valid[:n] = True
+        return merged, valid, n
+
+    def _init_carry(self, batch, valid) -> Tuple[Any, Any]:
+        """Zero carry state, shaped like the final reduce's output schema
+        (derived by abstract evaluation — no compile, no FLOPs). Also
+        enforces the carry contract: the reduce must be schema-preserving."""
+        df = self.pipeline
+        carry_at = _last_reduce_index(df)
+
+        def prefix(records, valid, upto):
+            valid = valid.reshape(-1)
+            for stage in df.stages[:upto]:
+                if isinstance(stage, MapStage):
+                    records = stage.fn(records)
+                    if _leading(records) != valid.shape[0]:
+                        valid = jnp.ones((_leading(records),), jnp.bool_)
+                elif isinstance(stage, ReduceStage):
+                    records, valid, _ = _split_reduce_out(
+                        stage.fn(records, valid))
+                    valid = valid.reshape(-1)
+                # shuffle/sort: schema-preserving, leading dim irrelevant
+            return records
+
+        def schema_of(upto):
+            shape = jax.eval_shape(lambda r, v: prefix(r, v, upto),
+                                   batch, valid)
+            leaves, treedef = jax.tree.flatten(shape)
+            return treedef, tuple((l.shape[1:], jnp.dtype(l.dtype))
+                                  for l in leaves)
+
+        t_in, in_schema = schema_of(carry_at)
+        t_out, out_schema = schema_of(carry_at + 1)
+        if (t_in, in_schema) != (t_out, out_schema):
+            raise ValueError(
+                "streaming carry requires a schema-preserving reduce (its "
+                "output is fed back into its input next batch); got input "
+                f"schema {in_schema} vs output {out_schema}")
+        cap = self.carry_capacity * self.inner.axis_size
+        leaves = [jnp.zeros((cap,) + tuple(s), d) for s, d in out_schema]
+        return (jax.tree.unflatten(t_out, leaves),
+                jnp.zeros((cap,), jnp.bool_))
+
+    def carry_state(self) -> Optional[Any]:
+        """Dense numpy view of the current cross-batch aggregate (the valid
+        carry rows), or None before the first carried batch."""
+        if self._carry is None:
+            return None
+        rec, valid = self._carry
+        v = np.asarray(valid)
+        return jax.tree.map(lambda a: np.asarray(a)[v], rec)
+
+    # -- stats ---------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Executor + per-tenant serving stats: throughput, compile-cache
+        counters (zero recompiles after warm-up <=> ``misses`` frozen),
+        queue depths, latency percentiles, timeout/requeue counts."""
+        info = self.inner.cache_info()
+        secs = max(self._run_seconds, 1e-9)
+        return {
+            "steps": self._steps,
+            "records_in": self._records_in,
+            "records_per_s": self._records_in / secs,
+            "run_seconds": self._run_seconds,
+            "batch_failures": self._batch_failures,
+            "cache": info._asdict(),
+            "tenants": self.queue.stats(),
+        }

@@ -463,6 +463,14 @@ with mesh:
     ex.run(df2, data)          # evicted: must retrace
     assert trace_count[0] == n + 2
     assert len(ex._cache) == 2
+# the cache_info counters must tell the same story as the trace counts:
+# 4 lowers (df1, df2, df3, df2-again), 2 hits (both df1 reruns), and the
+# two evictions (df2 then df3) are counted, not silent
+info = ex.cache_info()
+assert info.misses == 4, info
+assert info.hits == 2, info
+assert info.evictions == 2, info
+assert info.currsize == 2 and info.maxsize == 2, info
 print("lru eviction ok")
 """)
 

@@ -65,6 +65,70 @@ def test_slot_reuse_isolation():
     assert by_id[1].out_tokens == greedy_reference(model, params, cfg, p2, 3)
 
 
+def test_run_to_completion_reports_unfinished_work():
+    """Satellite regression: exhausting max_steps used to silently drop the
+    in-flight and queued requests — the report must surface them."""
+    cfg, model, params, eng = make_engine(slots=1)
+    reqs = [Request(i, np.array([3, 1 + i], np.int32), max_new_tokens=50)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    report = eng.run_to_completion(max_steps=2)
+    assert not report.completed
+    assert len(report.unfinished) > 0
+    # every submitted request is accounted for, exactly once
+    seen = sorted(r.req_id for r in list(report) + report.unfinished)
+    assert seen == [0, 1, 2]
+    assert all(not r.done for r in report.unfinished)
+    # back-compat: the report iterates/lens as the done list
+    assert isinstance(report, list)
+    # and with budget the same engine drains completely
+    report2 = eng.run_to_completion()
+    assert report2.completed
+    done = {r.req_id for r in list(report) + list(report2)}
+    assert done == {0, 1, 2}
+
+
+def test_tenant_mode_priority_and_fair_refills():
+    """With a TenantQueue attached, slot refills follow strict priority
+    (urgent drains before bulk gets a slot) and completions flow back into
+    the per-tenant stats; deadlines are measured in engine steps."""
+    from repro.sphere.streaming import QueueFull, TenantQueue
+
+    cfg, model, params, _ = make_engine()
+    tq = TenantQueue(quantum=4.0, capacity=8)
+    tq.register("urgent", priority=0)
+    tq.register("bulk", priority=1)
+    eng = ServeEngine(model, params, batch_slots=1, max_len=64, tenants=tq)
+    rng = np.random.default_rng(0)
+    for i in range(2):          # bulk submitted FIRST, must still wait
+        eng.submit(Request(i, rng.integers(0, cfg.vocab, size=4)
+                           .astype(np.int32), max_new_tokens=3,
+                           tenant="bulk"))
+    for i in range(2, 4):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab, size=4)
+                           .astype(np.int32), max_new_tokens=3,
+                           tenant="urgent"))
+    report = eng.run_to_completion()
+    assert report.completed and len(report) == 4
+    assert [r.req_id for r in report[:2]] == [2, 3]    # urgent first
+    stats = tq.stats()
+    assert stats["urgent"]["delivered"] == 2
+    assert stats["bulk"]["delivered"] == 2
+    assert stats["bulk"]["latency_p50"] >= stats["urgent"]["latency_p50"]
+    # bounded admission: the 9th queued request bounces
+    for i in range(8):
+        eng.submit(Request(10 + i, np.array([1, 2], np.int32),
+                           max_new_tokens=2, tenant="bulk"))
+    try:
+        eng.submit(Request(99, np.array([1, 2], np.int32),
+                           max_new_tokens=2, tenant="bulk"))
+        raise AssertionError("QueueFull not raised")
+    except QueueFull:
+        pass
+    assert eng.run_to_completion().completed
+
+
 def test_encdec_whisper_serving():
     """Enc-dec serving: per-slot encoder memory; batched decode matches the
     single-request teacher-forced reference."""

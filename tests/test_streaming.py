@@ -1,0 +1,412 @@
+"""Streaming Sphere tests: the multi-tenant admission queue (pure python,
+deterministic virtual clocks), cross-batch carry + stream/batch equivalence
+(8-device subprocesses), and the compile-cache counters."""
+
+import collections
+import os
+
+import numpy as np
+import pytest
+
+from test_spmd import run_spmd
+
+from repro.sphere.scheduler import DeadlineHeap, SegStatus
+from repro.sphere.streaming import QueueFull, TenantQueue
+
+BENCH = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                     "benchmarks"))
+
+
+# -- DeadlineHeap --------------------------------------------------------------
+
+
+def test_deadline_heap_pop_due_order_and_peek():
+    h = DeadlineHeap()
+    h.push(5.0, "c")
+    h.push(1.0, "a")
+    h.push(3.0, "b")
+    assert len(h) == 3
+    assert h.peek() == 1.0
+    assert h.pop_due(0.5) == []
+    assert [x for _, x in h.pop_due(3.0)] == ["a", "b"]
+    assert len(h) == 1
+    assert [x for _, x in h.pop_due(100.0)] == ["c"]
+    assert h.peek() is None
+
+
+# -- TenantQueue: fairness / priority / backpressure ---------------------------
+
+
+def test_weighted_fair_share_drr():
+    """With every tenant permanently backlogged, served cost per tenant
+    converges to the weight ratio (deficit round-robin)."""
+    weights = {"a": 1.0, "b": 3.0, "c": 4.0}
+    q = TenantQueue(quantum=1.0, capacity=10_000)
+    for t, w in weights.items():
+        q.register(t, weight=w)
+    for _ in range(600):                       # deep enough that no tenant
+        for t in weights:                      # drains within 100 acquires
+            q.admit(t, payload=t, cost=1, now=0.0)
+    served = collections.Counter()
+    for _ in range(100):                       # all tenants stay backlogged
+        for tk in q.acquire(8, now=0.0):
+            q.complete(tk, now=1.0)
+            served[tk.tenant] += 1
+    total = sum(served.values())
+    wsum = sum(weights.values())
+    assert total == 800
+    for t, w in weights.items():
+        rel = (served[t] / total) / (w / wsum)
+        assert 0.9 <= rel <= 1.1, (t, rel, dict(served))
+
+
+def test_drr_uneven_costs_converge_to_weights():
+    """Fairness is in cost units, not request counts: a tenant sending big
+    requests gets the same record share as one sending small requests."""
+    q = TenantQueue(quantum=8.0, capacity=10_000)
+    q.register("small", weight=1.0)
+    q.register("big", weight=1.0)
+    for _ in range(400):
+        q.admit("small", "s", cost=2, now=0.0)
+    for _ in range(100):
+        q.admit("big", "b", cost=8, now=0.0)
+    served = collections.Counter()
+    for _ in range(40):
+        for tk in q.acquire(32, now=0.0):
+            q.complete(tk, now=1.0)
+            served[tk.tenant] += tk.cost
+    total = sum(served.values())
+    assert total == 40 * 32
+    rel = served["small"] / total
+    assert 0.45 <= rel <= 0.55, dict(served)
+
+
+def test_strict_priority_classes_no_bypass():
+    q = TenantQueue(quantum=16.0)
+    q.register("urgent", priority=0)
+    q.register("bulk", priority=1)
+    for _ in range(5):
+        q.admit("bulk", "b", cost=1, now=0.0)
+    for _ in range(3):
+        q.admit("urgent", "u", cost=1, now=0.0)
+    got = [tk.tenant for tk in q.acquire(4, now=0.0)]
+    # urgent drains completely before bulk sees any budget
+    assert got == ["urgent", "urgent", "urgent", "bulk"]
+    # non-bypassing: an urgent head too big for the remaining budget blocks
+    # lower classes from filling the gap (leftover budget is padding)
+    q.admit("urgent", "u", cost=3, now=0.0)
+    assert q.acquire(2, now=0.0) == []
+    assert q.depth("bulk") == 4
+
+
+def test_bounded_queue_backpressure():
+    q = TenantQueue(capacity=2)
+    q.register("t")
+    q.admit("t", 1, now=0.0)
+    q.admit("t", 2, now=0.0)
+    with pytest.raises(QueueFull):
+        q.admit("t", 3, now=0.0)
+    assert q.stats()["t"]["rejected"] == 1
+    assert q.depth("t") == 2
+    # draining makes room again
+    for tk in q.acquire(2, now=0.0):
+        q.complete(tk, now=0.0)
+    q.admit("t", 3, now=0.0)
+
+
+# -- TenantQueue: deadlines / requeue / exactly-once ---------------------------
+
+
+def test_timeout_requeues_at_head_with_fresh_deadline():
+    q = TenantQueue(quantum=16.0)
+    q.register("t")
+    first = q.admit("t", "first", now=0.0)            # no deadline
+    late = q.admit("t", "late", cost=1, timeout=5.0, now=0.0)
+    assert q.expire(4.9) == []
+    requeued = q.expire(5.1)
+    assert requeued == [late]
+    assert late.requeues == 1
+    assert late.deadline == pytest.approx(10.1)       # fresh deadline
+    assert q.stats()["t"]["timeouts"] == 1
+    # head position: the blown deadline escalates past the earlier request
+    got = q.acquire(1, now=5.1)
+    assert got == [late]
+    assert q.complete(late, now=5.2)
+    assert first.status == SegStatus.PENDING
+
+
+def test_exactly_once_delivery_with_requeued_twin():
+    """A ticket completes at most once: late completions are suppressed and
+    a still-queued requeued copy is withdrawn when its twin finishes."""
+    q = TenantQueue(quantum=16.0)
+    q.register("t")
+    tk = q.admit("t", "p", now=0.0)
+    (got,) = q.acquire(1, now=0.0)
+    assert got is tk and tk.status == SegStatus.RUNNING
+    # dispatcher thinks the batch is lost -> requeue; then the original
+    # in-flight copy completes after all
+    assert q.requeue(tk, now=1.0)
+    assert tk.status == SegStatus.PENDING and q.depth("t") == 1
+    assert q.complete(tk, now=2.0)                    # withdraws the copy
+    assert q.depth("t") == 0
+    assert q.acquire(1, now=2.0) == []
+    assert not q.complete(tk, now=3.0)                # second completion: no
+    assert q.stats()["t"]["delivered"] == 1
+    # expired RUNNING tickets are left alone (the dispatcher owns them)
+    tk2 = q.admit("t", "p2", timeout=1.0, now=10.0)
+    q.acquire(1, now=10.0)
+    assert q.expire(20.0) == []
+    assert tk2.status == SegStatus.RUNNING
+
+
+def test_max_requeues_abandons_ticket():
+    q = TenantQueue(quantum=16.0, max_requeues=2)
+    q.register("t")
+    tk = q.admit("t", "p", timeout=1.0, now=0.0)
+    assert q.expire(1.5) == [tk]        # requeue 1
+    assert q.expire(3.0) == [tk]        # requeue 2
+    assert q.expire(5.0) == []          # exhausted -> abandoned
+    assert tk.status == SegStatus.DATA_ERROR
+    assert q.depth("t") == 0
+    st = q.stats()["t"]
+    assert st["failed"] == 1 and st["timeouts"] == 3
+    assert not q.complete(tk, now=6.0)  # a failed ticket cannot deliver
+
+
+# -- StreamExecutor (1-device, in-process) -------------------------------------
+
+
+def _wordcount_stream_df(num_buckets):
+    import jax.numpy as jnp
+    from repro.core.mapreduce import default_hash, reduce_by_key_sum
+    from repro.sphere.dataflow import Dataflow
+
+    def emit(rec):
+        return {"key": rec["x"].astype(jnp.int32) % 7,
+                "value": jnp.ones_like(rec["x"], jnp.int32)}
+
+    def count(rec, valid):
+        k, v, d = reduce_by_key_sum(rec["key"], rec["value"], valid)
+        return {"key": k, "value": v}, k >= 0, d
+
+    return (Dataflow.stream_source()
+            .map(emit)
+            .shuffle(by=lambda r: default_hash(r["key"], num_buckets),
+                     num_buckets=num_buckets)
+            .reduce(count))
+
+
+def _make_stream_executor(micro_batch=16, **kw):
+    import jax
+    from repro.sphere.dataflow import SPMDExecutor
+    from repro.sphere.streaming import StreamExecutor
+
+    mesh = jax.make_mesh((1,), ("data",))
+    inner = SPMDExecutor(mesh)
+    return StreamExecutor(inner, _wordcount_stream_df(1),
+                          micro_batch=micro_batch, **kw)
+
+
+def test_stream_executor_carry_and_cache_counters():
+    """Micro-batches of one fixed shape reuse ONE compiled program (misses
+    stays 1, hits grows), and the carry snapshot tracks the running count."""
+    ex = _make_stream_executor(carry_capacity=8, clock=lambda: 0.0)
+    rng = np.random.default_rng(0)
+    seen = []
+    for step in range(5):
+        x = rng.integers(0, 100, size=16 if step % 2 else 10)
+        seen.append(x.astype(np.int32))
+        ex.submit({"x": seen[-1]})      # short batches get padded
+        batch = ex.step()
+        assert len(batch.delivered) == 1 and batch.dropped == 0
+        snap = ex.carry_state()
+        got = {int(k): int(v) for k, v in zip(snap["key"], snap["value"])}
+        want = collections.Counter(np.concatenate(seen).astype(int) % 7)
+        assert got == dict(want), step
+    info = ex.inner.cache_info()
+    assert info.misses == 1 and info.hits == 4 and info.evictions == 0
+    stats = ex.stats()
+    assert stats["steps"] == 5
+    assert stats["records_in"] == sum(len(x) for x in seen)
+    assert stats["tenants"]["default"]["delivered"] == 5
+
+
+def test_stream_executor_failed_batch_requeue_exactly_once():
+    """A lost micro-batch requeues its tickets; they are delivered on a later
+    batch — exactly once — and the final aggregate is unaffected."""
+    ex = _make_stream_executor(carry_capacity=8, clock=lambda: 0.0)
+    rng = np.random.default_rng(1)
+    xs = [rng.integers(0, 50, size=16).astype(np.int32) for _ in range(3)]
+    tickets = [ex.submit({"x": x}) for x in xs]
+    ex._fail_next_batch = True
+    lost = ex.step()
+    assert lost.delivered == [] and len(lost.requeued) == 1
+    assert lost.requeued[0].requeues == 1
+    delivered = [tk for b in ex.drain() for tk in b.delivered]
+    assert sorted(tk.req_id for tk in delivered) == \
+        sorted(tk.req_id for tk in tickets)         # all once, none twice
+    snap = ex.carry_state()
+    got = {int(k): int(v) for k, v in zip(snap["key"], snap["value"])}
+    want = collections.Counter(np.concatenate(xs).astype(int) % 7)
+    assert got == dict(want)
+    assert ex.stats()["batch_failures"] == 1
+
+
+def test_stream_executor_rejects_bad_requests():
+    ex = _make_stream_executor(carry_capacity=8)
+    with pytest.raises(ValueError, match="micro-batch"):
+        ex.submit({"x": np.zeros(17, np.int32)})     # larger than a batch
+    ex.submit({"x": np.zeros(4, np.int32)})
+    with pytest.raises(ValueError, match="schema"):
+        ex.submit({"x": np.zeros(4, np.float32)})    # schema drift
+    with pytest.raises(ValueError, match="stream_source"):
+        from repro.sphere.dataflow import Dataflow
+        _make_stream_executor().__class__(
+            ex.inner, Dataflow.source().map(lambda r: r), micro_batch=16)
+
+
+def test_stream_carry_requires_schema_preserving_reduce():
+    import jax.numpy as jnp
+    from repro.sphere.dataflow import Dataflow
+    from repro.sphere.streaming import StreamExecutor
+
+    def bad_reduce(rec, valid):       # changes the value dtype: not feedable
+        return ({"key": rec["key"],
+                 "value": rec["value"].astype(jnp.float32)},
+                valid, jnp.zeros((), jnp.int32))
+
+    df = (Dataflow.stream_source()
+          .map(lambda r: {"key": r["x"].astype(jnp.int32),
+                          "value": jnp.ones_like(r["x"], jnp.int32)})
+          .shuffle(by=lambda r: r["key"] % 1, num_buckets=1)
+          .reduce(bad_reduce))
+    ex = _make_stream_executor(carry_capacity=4)
+    ex2 = StreamExecutor(ex.inner, df, micro_batch=16, carry_capacity=4)
+    ex2.submit({"x": np.zeros(8, np.int32)})
+    with pytest.raises(ValueError, match="schema-preserving"):
+        ex2.step()
+    # a pipeline with no reduce cannot carry at all
+    nodf = (Dataflow.stream_source()
+            .map(lambda r: r)
+            .shuffle(by=lambda r: r["x"] % 1, num_buckets=1))
+    with pytest.raises(ValueError, match="reduce"):
+        StreamExecutor(ex.inner, nodf, micro_batch=16, carry_capacity=4)
+
+
+# -- stream/batch equivalence (8 devices, subprocess) --------------------------
+
+
+def test_stream_vs_batch_equivalence_flat_and_hierarchical():
+    """Acceptance: the SAME stream pipeline fed as K micro-batches (with
+    carry) ends at a snapshot multiset-identical to the one-shot run of the
+    concatenation — on a flat AND a hierarchical mesh, and equal to the
+    HostExecutor (Sector/SPE) one-shot result too."""
+    run_spmd("""
+import collections, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.mapreduce import default_hash, reduce_by_key_sum
+from repro.core.records import RecordCodec
+from repro.launch.train import make_sector
+from repro.sphere.dataflow import Dataflow, HostExecutor, SPMDExecutor
+from repro.sphere.spe import SPE
+from repro.sphere.streaming import StreamExecutor
+
+NB = 8
+codec = RecordCodec.from_fields({"word": np.uint8})
+def emit(rec):
+    return {"key": rec["word"].astype(jnp.int32),
+            "value": jnp.ones_like(rec["word"], jnp.int32)}
+def count(rec, valid):
+    k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+    return {"key": k, "value": v}, k >= 0, dropped
+df = (Dataflow.stream_source(codec)
+      .map(emit)
+      .shuffle(by=lambda r: default_hash(r["key"], NB), num_buckets=NB)
+      .reduce(count))
+
+rng = np.random.default_rng(13)
+K, MB = 7, 8 * 32
+words = rng.integers(0, 26, size=K * MB, dtype=np.uint8)
+want = dict(collections.Counter(words.astype(int).tolist()))
+
+def snapshot_counts(snap):
+    return {int(k): int(v) for k, v in zip(snap["key"], snap["value"])}
+
+mesh1 = jax.make_mesh((8,), ("data",))
+mesh2 = jax.make_mesh((2, 4), ("dc", "node"))
+for mesh, axes in ((mesh1, ("data",)), (mesh2, ("dc", "node"))):
+    ex = StreamExecutor(SPMDExecutor(mesh, axes=axes), df, micro_batch=MB,
+                        carry_capacity=32)
+    for i in range(K):
+        ex.submit({"word": words[i * MB:(i + 1) * MB]})
+        ex.step()
+    assert snapshot_counts(ex.carry_state()) == want, axes
+    assert ex.inner.cache_info().misses == 1, axes   # one compile for K
+
+# one-shot SPMD over the concatenation: same multiset
+with mesh1:
+    res = SPMDExecutor(mesh1).run(df, {"word": jnp.asarray(words)})
+rec = res.valid_records()
+assert {int(k): int(v) for k, v in zip(rec["key"], rec["value"])} == want
+
+# one-shot HostExecutor (Sector/SPE) over the same bytes: same multiset
+root = tempfile.mkdtemp()
+master, client, daemon = make_sector(root, num_slaves=4)
+client.upload_dataset("/wc/in", [s.tobytes() for s in np.split(words, 4)])
+daemon.run_until_stable()
+spes = [SPE(i, master.slaves[i].address, master, client.session_id)
+        for i in range(4)]
+hres = HostExecutor(master, client, spes).run(
+    df, [f"/wc/in.{i:05d}" for i in range(4)])
+hrec = hres.valid_records()
+assert {int(k): int(v) for k, v in zip(hrec["key"], hrec["value"])} == want
+print("stream == batch across executors:", len(want), "keys")
+""")
+
+
+def test_streamed_sort_batches_are_sorted_and_lossless():
+    """A carry-less stream pipeline (sort) treats every micro-batch as an
+    independent slice of the output stream: each batch is globally sorted
+    and the union of batches is the multiset of everything submitted."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.sphere.dataflow import Dataflow, SPMDExecutor
+from repro.sphere.streaming import StreamExecutor
+
+mesh = jax.make_mesh((8,), ("data",))
+df = Dataflow.stream_source().sort(key=lambda r: r["key"], num_buckets=8,
+                                   capacity_factor=3.0)
+MB = 8 * 64
+ex = StreamExecutor(SPMDExecutor(mesh), df, micro_batch=MB)
+rng = np.random.default_rng(4)
+seen = []
+for i in range(5):
+    keys = rng.integers(0, 2**31 - 2, size=MB).astype(np.int32)
+    seen.append(keys)
+    ex.submit({"key": keys, "payload": np.arange(MB, dtype=np.int32)})
+    b = ex.step()
+    assert b.dropped == 0
+    out = b.valid_records()
+    assert out["key"].shape == (MB,)
+    assert (np.diff(out["key"]) >= 0).all(), i
+    assert (np.sort(out["key"]) == np.sort(keys)).all(), i
+assert ex.inner.cache_info().misses == 1
+print("streamed sort ok")
+""")
+
+
+def test_streaming_soak_acceptance():
+    """Run the real soak harness end-to-end and apply its acceptance gates:
+    >=3 tenants over >=20 micro-batches on one compiled pipeline, fair share
+    within 10% of weights, timed-out request requeued then delivered exactly
+    once, stream == batch."""
+    run_spmd(f"""
+import sys
+sys.path.insert(0, {BENCH!r})
+import streaming_bench
+res = streaming_bench.soak(steps=22)
+failures = streaming_bench.check(res)
+assert not failures, failures
+print("soak acceptance ok:", res["steps"], "batches,",
+      res["cache"]["misses"], "compile")
+""")
