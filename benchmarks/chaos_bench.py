@@ -1,0 +1,232 @@
+"""Chaos recovery benchmark: what does surviving a device loss cost?
+
+Runs the word-count shuffle pipeline on 8 virtual devices three ways:
+
+- ``clean``      — the fused ``jit(shard_map)`` fast path;
+- ``segmented``  — the same pipeline under ``chaos=FaultPlan(kind="none")``,
+  i.e. per-hop execution with a :class:`~repro.sphere.chaos.HopCheckpoint`
+  sealed at every boundary but no fault injected (the checkpointing tax);
+- ``recovered``  — ``lose_device`` injected between stage A and stage B:
+  the executor shrinks the mesh (8 -> 4 devices), restores the last hop
+  checkpoint via ``elastic.remesh`` and resumes.
+
+``chaos_recovery_overhead`` = recovered wall time / clean wall time, measured
+after one warm-up pass of each path so compile time is excluded and the ratio
+reflects the steady-state cost (checkpoint encode/decode + remesh + running
+the tail of the job at half width). The row is merged into
+``BENCH_kernels.json`` without clobbering the kernel/stream rows.
+
+``--check`` gates the acceptance criteria, not the timing noise:
+
+- the recovered multiset equals the clean multiset (headline invariant);
+- exactly one recovery happened and the fault actually fired;
+- drop counts are conserved across the fault;
+- the overhead ratio is finite and under a deliberately lenient bound.
+
+Run:  PYTHONPATH=src python benchmarks/chaos_bench.py [--check] [--json P]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:        # standalone: give the bench 8 devices
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import collections
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NB = 8
+N_RECORDS = 8 * 256
+# steady-state recovery should cost well under this multiple of a clean run;
+# lenient on purpose — correctness is gated hard, wall time only sanity-checked
+OVERHEAD_BOUND = 100.0
+
+
+def _build_pipeline():
+    from repro.core.mapreduce import default_hash, reduce_by_key_sum
+    from repro.sphere.dataflow import Dataflow
+
+    def emit(rec):
+        return {"key": rec["word"].astype(jnp.int32),
+                "value": jnp.ones_like(rec["word"], jnp.int32)}
+
+    def count(rec, valid):
+        k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+        return {"key": k, "value": v}, k >= 0, dropped
+
+    return (Dataflow.source()
+            .map(emit)
+            .shuffle(by=lambda r: default_hash(r["key"], NB), num_buckets=NB)
+            .reduce(count))
+
+
+def _counts(res) -> Dict[int, int]:
+    rec = res.valid_records()
+    return {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
+
+
+def bench(repeats: int = 3) -> Dict[str, object]:
+    from repro.sphere.chaos import FaultPlan
+    from repro.sphere.dataflow import SPMDExecutor
+
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("data",))
+    ex = SPMDExecutor(mesh)
+    df = _build_pipeline()
+
+    rng = np.random.default_rng(7)
+    words = rng.integers(0, 26, size=N_RECORDS).astype(np.uint8)
+    want = dict(collections.Counter(words.tolist()))
+    src = {"word": jnp.asarray(words)}
+
+    def timed(fn):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out.records)
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    with mesh:
+        # warm-up passes: compile the fused path, the per-hop sub-pipelines
+        # and the shrunken-mesh sub-executor before any clock starts
+        clean_warm = ex.run(df, src)
+        seg_warm = ex.run(df, src, chaos=FaultPlan(kind="none"))
+        ex.run(df, src, chaos=FaultPlan(kind="lose_device", phase=1, seed=0))
+
+        t_clean, clean = timed(lambda: ex.run(df, src))
+        t_seg, seg = timed(
+            lambda: ex.run(df, src, chaos=FaultPlan(kind="none")))
+
+        plans: List[FaultPlan] = []
+
+        def recovered_run():
+            plan = FaultPlan(kind="lose_device", phase=1, seed=0)
+            plans.append(plan)
+            return ex.run(df, src, chaos=plan)
+
+        t_rec, rec = timed(recovered_run)
+
+    clean_counts = _counts(clean)
+    rec_counts = _counts(rec)
+    last_plan = plans[-1]
+    return {
+        "ndev": ndev,
+        "records": N_RECORDS,
+        "num_buckets": NB,
+        "clean_us": t_clean * 1e6,
+        "segmented_us": t_seg * 1e6,
+        "recovered_us": t_rec * 1e6,
+        "checkpoint_overhead": t_seg / t_clean,
+        "recovery_overhead": t_rec / t_clean,
+        "fault_fired": last_plan.fired,
+        "fault_events": list(last_plan.events),
+        "recoveries": int(rec.recoveries),
+        "dropped_clean": int(clean.dropped),
+        "dropped_recovered": int(rec.dropped),
+        "multiset_equal": rec_counts == clean_counts == want
+        and _counts(seg) == want
+        and _counts(clean_warm) == _counts(seg_warm) == want,
+    }
+
+
+def check(res: Dict[str, object]) -> List[str]:
+    failures = []
+    if not res["multiset_equal"]:
+        failures.append("recovered multiset != clean multiset")
+    if not res["fault_fired"]:
+        failures.append("lose_device fault never fired")
+    if res["recoveries"] != 1:
+        failures.append(f"expected exactly 1 recovery, got {res['recoveries']}")
+    if res["dropped_recovered"] != res["dropped_clean"]:
+        failures.append(f"drop count not conserved: clean dropped "
+                        f"{res['dropped_clean']}, recovered dropped "
+                        f"{res['dropped_recovered']}")
+    ratio = res["recovery_overhead"]
+    if not np.isfinite(ratio) or ratio > OVERHEAD_BOUND:
+        failures.append(f"recovery overhead {ratio:.1f}x exceeds the "
+                        f"{OVERHEAD_BOUND:.0f}x sanity bound")
+    return failures
+
+
+def _merge_json(json_path: str, res: Dict[str, object]) -> None:
+    try:
+        with open(json_path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        payload = {"schema": "repro.kernel_bench.v1", "results": {}}
+    payload.setdefault("results", {})
+    payload["results"]["chaos_recovery_overhead"] = {
+        "value": res["recovery_overhead"],
+        "checkpoint_overhead": res["checkpoint_overhead"],
+        "clean_us": res["clean_us"],
+        "segmented_us": res["segmented_us"],
+        "recovered_us": res["recovered_us"],
+        "ndev": res["ndev"], "records": res["records"],
+        "recoveries": res["recoveries"],
+        "multiset_equal": res["multiset_equal"],
+        "note": "recovered/clean wall time, warm caches; lose_device at the "
+                "stage-A/stage-B boundary, mesh 8 -> 4",
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def run(json_path: str | None = None) -> List[str]:
+    res = bench()
+    lines = [
+        f"chaos_clean,{res['clean_us']:.0f},fused run "
+        f"({res['records']} records, {res['ndev']} devices)",
+        f"chaos_segmented,{res['segmented_us']:.0f},per-hop checkpoints, "
+        f"no fault ({res['checkpoint_overhead']:.2f}x clean)",
+        f"chaos_recovery_overhead,{res['recovered_us']:.0f},"
+        f"{res['recovery_overhead']:.2f}x clean (lose_device at boundary 1, "
+        f"recoveries={res['recoveries']}, "
+        f"multiset_equal={res['multiset_equal']})",
+    ]
+    if json_path:
+        _merge_json(json_path, res)
+        lines.append(f"chaos_bench_json,0,merged into {json_path}")
+    run.last_result = res
+    return lines
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    do_check = "--check" in args
+    json_path = None
+    if "--json" in args:
+        idx = args.index("--json") + 1
+        if idx >= len(args):
+            print("usage: chaos_bench.py [--json PATH] [--check]")
+            sys.exit(2)
+        json_path = args[idx]
+    elif do_check:
+        json_path = "BENCH_kernels.json"
+    for line in run(json_path=json_path):
+        print(line)
+    if do_check:
+        res = run.last_result
+        failures = check(res)
+        if failures:
+            for msg in failures:
+                print(f"CHECK FAILED: {msg}")
+            sys.exit(1)
+        print(f"CHECK OK: device loss at the stage boundary recovered in "
+              f"{res['recovery_overhead']:.2f}x clean wall time "
+              f"(recoveries={res['recoveries']}, multiset unchanged, "
+              f"drops conserved)")
+
+
+if __name__ == "__main__":
+    main()

@@ -281,14 +281,16 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
 
     if json_path:
         from repro.kernels.ops import _interpret_default
-        # the streaming soak (benchmarks/streaming_bench.py) merges its
-        # stream_* trajectory points into the same file — keep them alive
-        # across kernel-bench rewrites
+        # the streaming soak (benchmarks/streaming_bench.py) and the chaos
+        # bench (benchmarks/chaos_bench.py) merge their stream_* / chaos_*
+        # trajectory points into the same file — keep them alive across
+        # kernel-bench rewrites
         try:
             with open(json_path) as f:
                 prior = json.load(f).get("results", {})
             results.update({k: v for k, v in prior.items()
-                            if k.startswith("stream_") and k not in results})
+                            if k.startswith(("stream_", "chaos_"))
+                            and k not in results})
         except (OSError, ValueError):
             pass
         payload = {

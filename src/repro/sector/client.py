@@ -40,6 +40,14 @@ class SectorClient:
     def stat(self, path: str) -> Optional[FileMeta]:
         return self.master.lookup(path)
 
+    def recover(self, path: str) -> FileMeta:
+        """Mid-job recovery hook (paper §3.5.2): after a failed segment read,
+        ask the master to prune stale replica locations, rediscover surviving
+        copies by scan, and re-replicate the file back toward the replication
+        factor. Raises IOError when every copy is gone."""
+        self.master.security.check_access(self.session_id, path, "r")
+        return self.master.recover_file(path)
+
     def ls(self, prefix: str = "/") -> List[FileMeta]:
         return self.master.list_dir(prefix)
 

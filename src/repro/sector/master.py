@@ -50,7 +50,8 @@ class Master:
         self.block_size = block_size
         self.slaves: Dict[int, SlaveNode] = {}
         self.index: Dict[str, FileMeta] = {}
-        self.stats = {"replications": 0, "lost_files": 0, "transfers": 0}
+        self.stats = {"replications": 0, "lost_files": 0, "transfers": 0,
+                      "recoveries": 0}
 
     # -- slave membership ---------------------------------------------------
     def register_slave(self, slave: SlaveNode) -> None:
@@ -234,15 +235,74 @@ class Master:
         return [self.slaves[s].address for s in sorted(meta.locations)
                 if s in self.slaves and self.slaves[s].alive]
 
+    # -- mid-job recovery -----------------------------------------------------
+    def _live_holders(self, meta: FileMeta) -> List[int]:
+        return [s for s in sorted(meta.locations)
+                if s in self.slaves and self.slaves[s].alive
+                and self.slaves[s].has_file(meta.path)]
+
+    def _replicate_once(self, meta: FileMeta) -> bool:
+        """Create at most one new topology-spread copy of ``meta`` from a
+        live holder. Returns True iff a copy was made."""
+        live = self._live_holders(meta)
+        if not live:
+            return False
+        cands = self._placement_candidates(meta.size, exclude=set(live))
+        if not cands:
+            return False
+        existing = [self.slaves[s].address for s in live]
+        addr = spread_choice([c.address for c in cands], existing)
+        dst = next(c for c in cands if c.address == addr)
+        data = self.slaves[live[0]].read_file(meta.path)
+        dst.write_file(meta.path, data)
+        meta.locations.add(dst.slave_id)
+        self.stats["replications"] += 1
+        return True
+
+    def recover_file(self, path: str) -> FileMeta:
+        """Restore a file whose index locations went stale mid-job (paper
+        §3.5.2 meets §2.2): prune locations that no longer actually hold the
+        bytes, fall back to a directory scan of every live slave (the §2.2
+        scan-based metadata recovery — a copy may survive on a slave the
+        index lost track of), then re-replicate from a surviving copy back
+        toward the replication factor. Raises IOError when no live copy
+        exists anywhere (the data is truly lost)."""
+        meta = self._meta_or_raise(path)
+        good = set(self._live_holders(meta))
+        if not good:
+            good = {sid for sid, s in self.slaves.items()
+                    if s.alive and s.has_file(path)}
+        stale = meta.locations != good
+        meta.locations = good
+        if not good:
+            self.stats["lost_files"] += 1
+            raise IOError(f"no surviving replica of {path}")
+        made = 0
+        while (len(self._live_holders(meta)) < self.replication_factor
+               and self._replicate_once(meta)):
+            made += 1
+        if stale or made:
+            self.stats["recoveries"] += 1
+        return meta
+
 
 class ReplicationDaemon:
     """Periodic replication check (paper §2.2): for every under-replicated
     file, create a new copy on a topology-spread slave. Run ``tick()`` from
     the training loop / tests; ``run_until_stable()`` iterates to fixpoint.
+
+    ``period`` rate-limits ordinary ticks (the paper's replication is lazy
+    and *periodic*, which is what keeps a flapping slave from triggering a
+    re-replication storm): a tick arriving sooner than ``period`` seconds
+    after the last effective one is a no-op. ``period=0`` keeps the old
+    always-run behaviour; ``clock`` is injectable for tests.
     """
 
-    def __init__(self, master: Master):
+    def __init__(self, master: Master, period: float = 0.0, clock=time.time):
         self.master = master
+        self.period = period
+        self.clock = clock
+        self._last: Optional[float] = None
 
     def under_replicated(self) -> List[FileMeta]:
         m = self.master
@@ -253,8 +313,15 @@ class ReplicationDaemon:
                  if s in m.slaves and m.slaves[s].alive]) < m.replication_factor
         ]
 
-    def tick(self, max_copies: int = 1 << 30) -> int:
-        """One replication pass; returns the number of new copies created."""
+    def tick(self, max_copies: int = 1 << 30, force: bool = False) -> int:
+        """One replication pass; returns the number of new copies created.
+
+        Honors ``period`` unless ``force``: a call inside the quiet window
+        does nothing (and does not reset the window)."""
+        if (not force and self.period > 0 and self._last is not None
+                and self.clock() - self._last < self.period):
+            return 0
+        self._last = self.clock()
         m = self.master
         m.heartbeat_sweep()
         created = 0
@@ -265,24 +332,14 @@ class ReplicationDaemon:
             if not live:
                 m.stats["lost_files"] += 1
                 continue
-            cands = m._placement_candidates(meta.size, exclude=set(live))
-            if not cands:
-                continue
-            existing = [m.slaves[s].address for s in live]
-            addr = spread_choice([c.address for c in cands], existing)
-            dst = next(c for c in cands if c.address == addr)
-            src = m.slaves[live[0]]
-            data = src.read_file(meta.path)
-            dst.write_file(meta.path, data)
-            meta.locations.add(dst.slave_id)
-            created += 1
-            m.stats["replications"] += 1
+            if m._replicate_once(meta):
+                created += 1
         return created
 
     def run_until_stable(self, max_rounds: int = 64) -> int:
         total = 0
         for _ in range(max_rounds):
-            made = self.tick()
+            made = self.tick(force=True)
             total += made
             if made == 0:
                 break

@@ -116,6 +116,17 @@ class SlaveNode:
         return self.capacity_bytes - self.used_bytes()
 
     # -- failure injection ----------------------------------------------------
+    def drop_file(self, sector_path: str) -> None:
+        """Silently lose one local file WITHOUT master coordination — the
+        fault-injection twin of :meth:`delete_file`. Models bit-rot / a lost
+        disk sector / a partially-failed move: the master's index still lists
+        this slave as a replica holder, so the next coordinated read here
+        fails and the data plane must recover (see
+        :meth:`repro.sector.master.Master.recover_file`)."""
+        local = self._local(sector_path)
+        if os.path.exists(local):
+            os.remove(local)
+
     def kill(self, wipe: bool = False) -> None:
         """Simulate node failure. ``wipe=True`` models disk loss as well."""
         self.alive = False

@@ -1,0 +1,240 @@
+"""Deterministic fault injection for Sphere dataflows.
+
+The paper's fault-tolerance story (§2.2 lazy re-replication, §3.5.2 SPE
+re-pooling) is only worth anything if a *running* job survives it. This
+module is the chaos layer that proves it: a :class:`FaultPlan` describes one
+failure — which kind, at which phase boundary, against which victim — and
+the executors consult it at every boundary. Faults are seeded and replayable:
+the same plan against the same deployment kills the same slave / drops the
+same bucket / loses the same device every time, so the chaos test matrix in
+``tests/test_chaos.py`` is a deterministic property suite, not a flake
+generator.
+
+Fault kinds and the recovery path each one exercises:
+
+``kill_slave``   (HostExecutor) — a storage node dies (optionally with its
+    disk, ``wipe=True``) and every SPE co-located with it crashes on its next
+    segment. Survived by master routing around dead slaves + §3.5.2 segment
+    re-pooling + the replication daemon restoring the replica count.
+
+``drop_bucket``  (HostExecutor) — one input file of the target phase rots
+    away from *every* slave the master's index lists, while one unlisted
+    survivor copy exists (the copy is stashed slave-to-slave, bypassing the
+    index — modelling the index going stale while bytes survive, e.g. after
+    a partial node recovery). The read fails with
+    :class:`~repro.sphere.spe.SegmentLost`; the engine calls
+    ``SectorClient.recover``; the master prunes the stale locations, finds
+    the survivor by the §2.2 directory scan, re-replicates, and the re-pooled
+    segment succeeds.
+
+``lose_device``  (SPMDExecutor) — one device of the mesh is lost at a
+    shuffle-hop boundary. Survived by the hop checkpoint (layout-agnostic
+    byte rows, the same property ``train/elastic.py`` exploits): the
+    executor re-forms the largest usable smaller mesh
+    (:func:`repro.train.elastic.shrink_mesh`), re-shards the checkpoint onto
+    it (:func:`repro.train.elastic.remesh`) and resumes the interrupted hop.
+
+``none``         — no fault; with ``SPMDExecutor.run(chaos=...)`` it still
+    forces the segmented per-hop execution path, which is how the tests
+    prove segmented == fused before trusting the recovery runs.
+
+The headline invariant, asserted by ``tests/test_chaos.py``: **the delivered
+multiset is unchanged under any single injected failure between stage A and
+stage B**, for both executors and both (flat / hierarchical) topologies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.records import RecordCodec
+
+HOST_KINDS = ("kill_slave", "drop_bucket")
+SPMD_KINDS = ("lose_device",)
+KINDS = ("none",) + HOST_KINDS + SPMD_KINDS
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One injected failure, fully determined by its fields + ``seed``.
+
+    ``phase`` is the phase-boundary index at which the fault fires:
+    boundary ``b`` is *before* phase ``b`` runs (0 = before the first
+    phase, i.e. against the source files / initial shards; 1 = between the
+    first and second phase — "between stage A and stage B").
+
+    ``victim`` pins the target (slave id for ``kill_slave``, global device
+    index for ``lose_device``); ``path`` pins the file for ``drop_bucket``.
+    When unset, the target is drawn from a ``random.Random(seed)`` over the
+    *sorted* candidate set — deterministic per (plan, deployment).
+    """
+
+    kind: str = "none"
+    phase: int = 1
+    victim: Optional[int] = None
+    path: Optional[str] = None
+    #: ``kill_slave``: also lose the disk (the harsher variant)
+    wipe: bool = True
+    seed: int = 0
+    fired: bool = dataclasses.field(default=False, init=False)
+    #: human-readable audit log of what was actually broken
+    events: List[str] = dataclasses.field(default_factory=list, init=False)
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+
+    def _rng(self) -> random.Random:
+        # integer mix, NOT hash(tuple): str hashes vary per-process with
+        # PYTHONHASHSEED, and a chaos plan must replay identically anywhere
+        mix = 0
+        for part in (self.seed, KINDS.index(self.kind), self.phase):
+            mix = mix * 1000003 + part
+        return random.Random(mix)
+
+    # -- host (Sector/SPE) faults -------------------------------------------
+    def fire_host(self, boundary: int, master, paths: Sequence[str],
+                  spes: Sequence[Any] = ()) -> bool:
+        """Called by :class:`~repro.sphere.dataflow.HostExecutor` at every
+        phase boundary with that phase's input ``paths``. Injects the fault
+        iff this is the armed boundary; returns whether it fired."""
+        if self.fired or boundary != self.phase or self.kind not in HOST_KINDS:
+            return False
+        if self.kind == "kill_slave":
+            self._kill_slave(boundary, master, paths, spes)
+        else:
+            self._drop_bucket(boundary, master, paths)
+        self.fired = True
+        return True
+
+    def _kill_slave(self, boundary: int, master, paths: Sequence[str],
+                    spes: Sequence[Any]) -> None:
+        if self.victim is not None:
+            slave = master.slaves[self.victim]
+        else:
+            holders = set()
+            for p in paths:
+                meta = master.lookup(p)
+                if meta is not None:
+                    holders |= meta.locations
+            cands = [master.slaves[s] for s in sorted(holders)
+                     if s in master.slaves and master.slaves[s].alive]
+            if not cands:
+                cands = sorted(master.live_slaves(), key=lambda s: s.slave_id)
+            if not cands:
+                raise RuntimeError("kill_slave: no live slave to kill")
+            slave = self._rng().choice(cands)
+        slave.kill(wipe=self.wipe)
+        crashed = []
+        for spe in spes:
+            if spe.address == slave.address:
+                # its next segment raises IOError -> engine re-pools (§3.5.2)
+                spe.fail_after = spe.segments_done
+                crashed.append(spe.spe_id)
+        self.events.append(
+            f"boundary {boundary}: killed slave {slave.slave_id} "
+            f"at {slave.address}{' (disk wiped)' if self.wipe else ''}; "
+            f"crashed SPEs {crashed}")
+
+    def _drop_bucket(self, boundary: int, master, paths: Sequence[str]) -> None:
+        cands = []
+        for p in sorted(set(paths)):
+            meta = master.lookup(p)
+            if meta is None:
+                continue
+            if any(s in master.slaves and master.slaves[s].has_file(p)
+                   for s in meta.locations):
+                cands.append(p)
+        if self.path is not None:
+            path = self.path
+        elif cands:
+            path = self._rng().choice(cands)
+        else:
+            raise RuntimeError("drop_bucket: no input file with a live copy")
+        meta = master.lookup(path)
+        holders = [s for s in sorted(meta.locations)
+                   if s in master.slaves and master.slaves[s].has_file(path)]
+        data = master.slaves[holders[0]].read_file(path)
+        # stash one survivor copy on a slave the index does NOT list, writing
+        # slave-to-slave behind the master's back: the index is now fully
+        # stale and only the §2.2 scan in recover_file can find the bytes
+        hide = [s for s in master.live_slaves()
+                if s.slave_id not in meta.locations
+                and s.available_bytes() >= meta.size]
+        hide.sort(key=lambda s: s.slave_id)
+        keep: Optional[int] = None
+        if hide:
+            stash = self._rng().choice(hide)
+            stash.write_file(path, data)
+            where = f"stashed unlisted copy on slave {stash.slave_id}"
+        else:
+            # every live slave is a listed holder: keep one, drop the rest —
+            # the index is still stale (pruned holders) and recovery must run
+            keep = holders[-1]
+            where = f"kept only listed copy on slave {keep}"
+        for sid in holders:
+            if sid != keep:
+                master.slaves[sid].drop_file(path)
+        self.events.append(
+            f"boundary {boundary}: dropped {path} from listed holders "
+            f"{[s for s in holders if s != keep]}; {where}")
+
+    # -- SPMD (device) faults -------------------------------------------------
+    def fire_spmd(self, boundary: int, num_devices: int) -> Optional[int]:
+        """Called by the SPMD executor at every hop boundary. Returns the
+        global index of the lost device when the fault fires, else None."""
+        if self.fired or boundary != self.phase or self.kind not in SPMD_KINDS:
+            return None
+        lost = (self.victim if self.victim is not None
+                else self._rng().randrange(num_devices))
+        if not 0 <= lost < num_devices:
+            raise ValueError(f"victim device {lost} out of range {num_devices}")
+        self.fired = True
+        self.events.append(
+            f"boundary {boundary}: lost device {lost}/{num_devices}")
+        return lost
+
+
+@dataclasses.dataclass
+class HopCheckpoint:
+    """State of a dataflow at a shuffle-hop boundary, as layout-agnostic
+    bytes: the record pytree packed into ``(n, nbytes)`` uint8 rows (the
+    exact on-wire/on-disk layout of :class:`~repro.core.records.RecordCodec`)
+    plus the validity mask. Because rows are device-order contiguous and a
+    shrunken mesh extent always divides the old one
+    (:func:`repro.train.elastic.shrink_mesh`), every old per-device shard
+    lands whole on one new device at restore — reduce groups and bucket
+    segments are never split, which is what makes resume multiset-exact."""
+
+    codec: RecordCodec
+    payload: np.ndarray    # (n, codec.nbytes) uint8
+    valid: np.ndarray      # (n,) bool
+    hop: int
+    dropped: int
+
+    @classmethod
+    def snapshot(cls, records: Any, valid: Any, hop: int,
+                 dropped: int) -> "HopCheckpoint":
+        recs = jax.tree.map(np.asarray, records)
+        codec = RecordCodec.from_example(recs)
+        return cls(codec=codec, payload=codec.encode(recs),
+                   valid=np.asarray(valid).reshape(-1).astype(bool),
+                   hop=hop, dropped=int(dropped))
+
+    def restore(self, mesh: Mesh, axes: Sequence[str]) -> Tuple[Any, Any]:
+        """Decode and re-shard onto ``mesh`` via ``elastic.remesh``; returns
+        ``(records, valid)`` device arrays ready to resume hop ``hop``."""
+        from repro.train import elastic
+
+        axes = tuple(axes)
+        records = self.codec.decode(self.payload)
+        spec = P(axes[0]) if len(axes) == 1 else P(axes)
+        tree = (records, self.valid)
+        specs = jax.tree.map(lambda _: spec, tree)
+        return elastic.remesh(tree, mesh, specs)

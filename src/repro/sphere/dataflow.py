@@ -186,6 +186,12 @@ class DataflowResult:
     dropped: Any
     errors: Dict[Any, str] = dataclasses.field(default_factory=dict)
     retries: int = 0
+    #: mid-job recoveries fault tolerance performed: Sector re-replications
+    #: of lost bucket files (host) or hop-checkpoint resumes (SPMD)
+    recoveries: int = 0
+    #: segments that permanently failed and are MISSING from ``records``
+    #: (every one also appears in ``errors`` with a ``DATA_ERROR:`` prefix)
+    data_errors: int = 0
     #: streaming only: the ``(records, valid)`` cross-batch carry state the
     #: run produced (None on one-shot runs) — feed it back as the next
     #: micro-batch's ``carry``. See :mod:`repro.sphere.streaming`.
@@ -297,6 +303,11 @@ class SPMDExecutor:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        # chaos/resume machinery: per-hop sub-pipelines (pinning their parent
+        # so id()-keyed lookups stay sound) and sub-executors per mesh, so
+        # repeated chaos runs reuse compiled per-hop programs
+        self._subflows: Dict[Tuple[int, int], Tuple[Dataflow, Dataflow]] = {}
+        self._sub_execs: Dict[Any, "SPMDExecutor"] = {}
 
     @property
     def axis_size(self) -> int:
@@ -311,11 +322,21 @@ class SPMDExecutor:
 
     def run(self, pipeline: Dataflow, records: Any,
             valid: Optional[Any] = None,
-            carry: Optional[Tuple[Any, Any]] = None) -> DataflowResult:
+            carry: Optional[Tuple[Any, Any]] = None,
+            chaos: Optional[Any] = None) -> DataflowResult:
         """Execute ``pipeline`` over ``records`` sharded along ``axes``.
 
         ``records``: pytree of global arrays (or a
         :class:`repro.core.stream.SphereStream`, whose ``valid`` is used).
+
+        ``chaos``: a :class:`repro.sphere.chaos.FaultPlan`. When given, the
+        pipeline runs *segmented* — one compiled program per shuffle-hop
+        phase, with a :class:`~repro.sphere.chaos.HopCheckpoint` sealed at
+        every boundary — instead of one fused program, so an injected
+        ``lose_device`` fault can be survived by re-forming a smaller mesh
+        and resuming from the last checkpoint. ``kind="none"`` runs the
+        segmented path with no fault (it must deliver exactly the fused
+        result — asserted in tests/test_chaos.py).
 
         ``carry``: optional ``(records, valid)`` cross-batch state from the
         previous micro-batch of a *streaming* run. It is concatenated into
@@ -330,6 +351,8 @@ class SPMDExecutor:
         if isinstance(records, SphereStream):
             valid = records.valid if valid is None else valid
             records = records.data
+        if chaos is not None:
+            return self._run_segmented(pipeline, records, valid, carry, chaos)
         records = jax.tree.map(jnp.asarray, records)
         n = _leading(records)
         if valid is None:
@@ -376,6 +399,99 @@ class SPMDExecutor:
                 f"the old silent behaviour).")
         return DataflowResult(records=out_records, valid=out_valid,
                               dropped=dropped, carry=out_carry)
+
+    # -- segmented execution + device-loss recovery ---------------------------
+    def _sub_executor(self, mesh: Mesh) -> "SPMDExecutor":
+        sub = self._sub_execs.get(mesh)
+        if sub is None:
+            sub = SPMDExecutor(mesh, axes=self.axes, plan=None,
+                               use_pallas=self.use_pallas, chunks=self.chunks,
+                               cache_size=self.cache_size,
+                               debug_checks=self.debug_checks)
+            self._sub_execs[mesh] = sub
+        return sub
+
+    def _subflow(self, pipeline: Dataflow, pi: int, phase) -> Dataflow:
+        key = (id(pipeline), pi)
+        hit = self._subflows.get(key)
+        if hit is not None and hit[0] is pipeline:
+            return hit[1]
+        stages = tuple(phase.stages)
+        if phase.terminator is not None:
+            stages = stages + (phase.terminator,)
+        sub = Dataflow(stages=stages, codec=pipeline.codec)
+        self._subflows[key] = (pipeline, sub)
+        return sub
+
+    def _run_segmented(self, pipeline: Dataflow, records: Any, valid: Any,
+                       carry, chaos) -> DataflowResult:
+        """Run ``pipeline`` one shuffle-hop phase at a time, sealing a
+        :class:`~repro.sphere.chaos.HopCheckpoint` at every boundary; on an
+        injected device loss, re-form the largest usable smaller mesh
+        (``elastic.shrink_mesh``) and resume the interrupted hop from the
+        checkpoint (``elastic.remesh`` re-shards the layout-agnostic byte
+        rows — every old shard lands whole on one new device, so the
+        delivered multiset is identical to the fault-free run)."""
+        from repro.sphere.chaos import HOST_KINDS, HopCheckpoint
+        from repro.train import elastic
+
+        if chaos.kind in HOST_KINDS:
+            raise ValueError(
+                f"{chaos.kind!r} is a Sector-level fault; inject it via "
+                f"HostExecutor.run(chaos=...)")
+        if carry is not None:
+            raise ValueError("chaos injection does not compose with "
+                             "streaming carry state")
+        if self.plan is not None:
+            raise ValueError("chaos/resume re-forms the mesh on device loss "
+                             "and cannot honor an explicit ShufflePlan; "
+                             "construct the executor with axes=... instead")
+        phases = _phases(pipeline)
+        # the bucket layout must be pinned up front: after a device loss an
+        # auto bucket count (= axis_size) would silently re-bucket the data
+        nbs = []
+        for ph in phases:
+            t = ph.terminator
+            if t is None:
+                continue
+            nb = t.num_buckets
+            if (nb is None and isinstance(t, SortStage)
+                    and t.splitters is not None):
+                nb = int(np.asarray(t.splitters).shape[0]) + 1
+            if nb is None:
+                raise ValueError(
+                    "chaos/resume needs an explicit num_buckets (or sort "
+                    "splitters) on every shuffle/sort stage — an auto bucket "
+                    "count would change when the mesh shrinks")
+            nbs.append(nb)
+        nb_constraint = math.gcd(*nbs) if nbs else self.axis_size
+
+        records = jax.tree.map(jnp.asarray, records)
+        if valid is None:
+            valid = jnp.ones((_leading(records),), jnp.bool_)
+        exec_ = self._sub_executor(self.mesh)
+        dropped = 0
+        recoveries = 0
+        for pi, phase in enumerate(phases):
+            # seal the hop: the checkpoint survives whatever dies next
+            ckpt = HopCheckpoint.snapshot(records, valid, pi, dropped)
+            lost = chaos.fire_spmd(pi, exec_.axis_size)
+            if lost is not None:
+                new_mesh = elastic.shrink_mesh(exec_.mesh, self.axes, lost,
+                                               nb_constraint)
+                exec_ = self._sub_executor(new_mesh)
+                records, valid = ckpt.restore(new_mesh, self.axes)
+                dropped = ckpt.dropped
+                recoveries += 1
+                chaos.events.append(
+                    f"resumed hop {pi} on mesh "
+                    f"{dict(zip(self.axes, (new_mesh.shape[a] for a in self.axes)))}")
+            res = exec_.run(self._subflow(pipeline, pi, phase), records,
+                            valid=valid)
+            records, valid = res.records, res.valid
+            dropped += int(res.dropped)
+        return DataflowResult(records=records, valid=valid,
+                              dropped=dropped, recoveries=recoveries)
 
     # -- lowering -------------------------------------------------------------
     def _lower(self, df: Dataflow, with_carry: bool = False) -> Callable:
@@ -600,19 +716,38 @@ class HostExecutor:
     """
 
     def __init__(self, master, client, spes: Sequence[Any],
-                 max_retries: int = 2, scratch_prefix: str = "/.dataflow"):
+                 max_retries: int = 2, scratch_prefix: str = "/.dataflow",
+                 daemon: Optional[Any] = None):
         self.master = master
         self.client = client
         self.spes = list(spes)
         self.max_retries = max_retries
         self.scratch_prefix = scratch_prefix
+        #: optional :class:`repro.sector.master.ReplicationDaemon`; when set,
+        #: freshly uploaded bucket files are replicated before the next phase
+        #: reads them — without it a mid-job slave death can take the only
+        #: copy of a bucket with it (a DATA_ERROR, not silent loss)
+        self.daemon = daemon
 
     def run(self, pipeline: Dataflow, file_paths: Sequence[str],
-            ) -> DataflowResult:
+            chaos: Optional[Any] = None) -> DataflowResult:
         """Execute ``pipeline`` over Sector files. ``pipeline.codec`` is
         required: it decodes the source records (record_bytes =
-        ``codec.nbytes``)."""
+        ``codec.nbytes``).
+
+        ``chaos``: a :class:`repro.sphere.chaos.FaultPlan` fired at each
+        phase boundary (``kill_slave`` / ``drop_bucket``). Recovery is
+        always armed regardless: segment reads that fail because every
+        listed replica is gone trigger ``SectorClient.recover`` (master
+        prunes stale locations, rediscovers survivors by §2.2 scan,
+        re-replicates) and the segment is re-pooled per §3.5.2."""
+        from repro.sphere.chaos import SPMD_KINDS
         from repro.sphere.engine import SphereProcess
+
+        if chaos is not None and chaos.kind in SPMD_KINDS:
+            raise ValueError(
+                f"{chaos.kind!r} is a device-mesh fault; inject it via "
+                f"SPMDExecutor.run(chaos=...)")
 
         if pipeline.codec is None:
             raise ValueError("HostExecutor needs Dataflow.source(codec=...) "
@@ -623,10 +758,14 @@ class HostExecutor:
         errors: Dict[Any, str] = {}
         retries = 0
         dropped = 0
+        recoveries = 0
+        data_errors = 0
         pending_sort: Optional[SortStage] = None
 
         phases = _phases(pipeline)
         for pi, phase in enumerate(phases):
+            if chaos is not None:
+                chaos.fire_host(pi, self.master, paths, self.spes)
             proc = SphereProcess(self.master, self.client.session_id,
                                  self.spes, max_retries=self.max_retries)
             holder: Dict[str, Any] = {"codec": None, "dropped": 0}
@@ -645,8 +784,11 @@ class HostExecutor:
                       {"s_min": 1 << 40, "s_max": 1 << 40})
             res = proc.run(paths, udf, record_bytes=codec.nbytes,
                            codec=codec, bucket_fn=bucket_fn,
-                           num_buckets=nb, **seg_kw)
+                           num_buckets=nb, recover=self.client.recover,
+                           **seg_kw)
             retries += res.retries
+            recoveries += res.recoveries
+            data_errors += res.data_errors
             dropped += holder["dropped"]
             errors.update({(pi, k): v for k, v in res.errors.items()})
             out_codec = holder["codec"] or codec
@@ -659,7 +801,8 @@ class HostExecutor:
                 return DataflowResult(
                     records=records,
                     valid=np.ones((_leading(records),), bool),
-                    dropped=dropped, errors=errors, retries=retries)
+                    dropped=dropped, errors=errors, retries=retries,
+                    recoveries=recoveries, data_errors=data_errors)
 
             # materialize bucket files as the next phase's input stream
             prefix = f"{scratch}/s{pi}"
@@ -667,6 +810,9 @@ class HostExecutor:
                 prefix, [np.ascontiguousarray(res.outputs[b]).tobytes()
                          for b in range(nb)])
             paths = [f"{prefix}.{b:05d}" for b in range(nb)]
+            if self.daemon is not None:
+                # replicate fresh bucket files before anything can eat them
+                self.daemon.run_until_stable()
             codec = out_codec
             pending_sort = term if isinstance(term, SortStage) else None
         raise AssertionError("unreachable: final phase returns")

@@ -22,7 +22,7 @@ from repro.core.records import RecordCodec
 from repro.core.stream import SegmentInfo, SphereStream
 from repro.sector.master import Master
 from repro.sector.topology import NodeAddress
-from repro.sphere.spe import SPE
+from repro.sphere.spe import SPE, SegmentLost
 
 
 @dataclasses.dataclass
@@ -34,6 +34,11 @@ class SphereResult:
     errors: Dict[int, str]
     #: total SPE-level retries that fault tolerance absorbed
     retries: int
+    #: mid-job Sector recoveries (lost bucket re-replicated from a survivor)
+    recoveries: int = 0
+    #: permanently failed segments surfaced as DATA_ERROR in ``errors`` —
+    #: a non-zero count means the output is *incomplete*, not just retried
+    data_errors: int = 0
 
     def concat(self) -> np.ndarray:
         parts = [self.outputs[i] for i in sorted(self.outputs)]
@@ -76,6 +81,7 @@ class SphereProcess:
         codec: Optional[RecordCodec] = None,
         s_min: int = 1,
         s_max: int = 1 << 30,
+        recover: Optional[Callable[[str], Any]] = None,
     ) -> SphereResult:
         """Execute ``udf`` over every segment; optionally route outputs to
         buckets (``bucket_fn`` maps a UDF output to {bucket_id: records}),
@@ -86,13 +92,21 @@ class SphereProcess:
         (the paper ships the UDF library *to* the SPE; the record schema
         rides along). ``s_min``/``s_max`` are the §3.5.1 segment-size clamp
         in bytes — pass a huge ``s_min`` to force whole-file segments (one
-        bucket file = one reduce group for the dataflow host executor)."""
+        bucket file = one reduce group for the dataflow host executor).
+
+        ``recover``: called with the Sector path of a segment whose input
+        bytes could not be fetched (every listed replica dead/missing, see
+        :class:`repro.sphere.spe.SegmentLost`). Normally
+        ``SectorClient.recover`` — it restores the file from a surviving
+        copy so the re-pooled segment succeeds; if it raises IOError the
+        data is truly gone and the segment becomes a DATA_ERROR."""
         segments = self.segment_stream(file_paths, record_bytes,
                                        s_min=s_min, s_max=s_max)
         outputs: Dict[int, Any] = {}
         errors: Dict[int, str] = {}
         buckets: Dict[int, List[Any]] = {b: [] for b in range(num_buckets)}
         retries = 0
+        recoveries = 0
 
         # locality-greedy assignment, then round-robin execution with retry
         pending = list(range(len(segments)))
@@ -122,19 +136,36 @@ class SphereProcess:
                 rr += 1
             try:
                 out = spe.process(seg, udf, record_bytes, codec=codec)
+            except SegmentLost as e:                  # input data lost; SPE fine
+                attempt[seg_i] += 1
+                if recover is not None:
+                    try:
+                        recover(e.path)
+                        recoveries += 1
+                    except (IOError, OSError) as gone:
+                        errors[seg_i] = f"DATA_ERROR: {gone}"
+                        continue
+                if attempt[seg_i] > self.max_retries + len(self.spes):
+                    errors[seg_i] = f"DATA_ERROR: gave up: {e}"
+                else:
+                    retries += 1
+                    pending.append(seg_i)             # re-pool (paper §3.5.2)
+                continue
             except (IOError, OSError) as e:           # SPE/node failure
                 live = [s for s in live if s is not spe]
                 attempt[seg_i] += 1
                 retries += 1
                 if attempt[seg_i] > self.max_retries + len(self.spes):
-                    errors[seg_i] = f"gave up: {e}"
+                    errors[seg_i] = f"DATA_ERROR: gave up: {e}"
                 else:
                     pending.append(seg_i)             # reassign (paper §3.5.2)
                 continue
             except Exception as e:                    # data/UDF error
                 attempt[seg_i] += 1
                 if attempt[seg_i] >= self.max_retries:
-                    errors[seg_i] = repr(e)           # report to application
+                    # report to application, *counted*: the output is missing
+                    # this segment and the caller must be able to tell
+                    errors[seg_i] = f"DATA_ERROR: {e!r}"
                 else:
                     retries += 1
                     pending.append(seg_i)
@@ -146,7 +177,11 @@ class SphereProcess:
                 for b, recs in bucket_fn(out).items():
                     buckets[b].append(recs)
 
-        result = SphereResult(outputs=outputs, errors=errors, retries=retries)
+        result = SphereResult(
+            outputs=outputs, errors=errors, retries=retries,
+            recoveries=recoveries,
+            data_errors=sum(1 for v in errors.values()
+                            if v.startswith("DATA_ERROR")))
         if bucket_fn is not None:
             # an empty bucket must keep the records' dtype and trailing dims
             # (np.zeros((0,)) would silently decay to 1-D float64)

@@ -27,6 +27,18 @@ from repro.sector.master import Master
 from repro.sector.topology import NodeAddress
 
 
+class SegmentLost(IOError):
+    """The SPE itself is healthy but its input segment could not be fetched
+    from Sector (every listed replica dead or missing). Distinguished from a
+    plain IOError (SPE crash) so the engine blames the *data*, not the
+    worker: the SPE stays in the pool and the engine triggers
+    ``SectorClient.recover`` before re-pooling the segment (§3.5.2)."""
+
+    def __init__(self, path: str, reason: str):
+        super().__init__(f"segment input {path} lost: {reason}")
+        self.path = path
+
+
 @dataclasses.dataclass
 class SPE:
     spe_id: int
@@ -39,8 +51,11 @@ class SPE:
 
     def read_segment(self, seg: SegmentInfo, record_bytes: int) -> np.ndarray:
         """Step 2: fetch the segment's bytes (whole-file slice + offset)."""
-        data = self.master.download(self.session_id, seg.file_path,
-                                    client_addr=self.address)
+        try:
+            data = self.master.download(self.session_id, seg.file_path,
+                                        client_addr=self.address)
+        except (FileNotFoundError, IOError, OSError) as e:
+            raise SegmentLost(seg.file_path, repr(e)) from e
         start = seg.offset * record_bytes
         stop = start + seg.num_records * record_bytes
         chunk = data[start:stop]

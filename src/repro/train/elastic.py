@@ -14,9 +14,11 @@ The same path implements scale-UP when capacity returns.
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+import math
+from typing import Any, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -45,3 +47,49 @@ def remesh(tree, mesh: Mesh, specs):
     flat_s = jax.tree.leaves(shard, is_leaf=lambda x: hasattr(x, "spec"))
     return jax.tree.unflatten(
         tdef, [jax.device_put(t, s) for t, s in zip(flat_t, flat_s)])
+
+
+def shrink_mesh(mesh: Mesh, axes: Sequence[str], lost_device: int,
+                num_buckets: int) -> Mesh:
+    """Re-form the largest usable mesh after losing one device mid-pipeline.
+
+    ``lost_device`` is the global (row-major over ``axes``) index of the dead
+    device. The surviving devices cannot keep the old shape, so the shuffle
+    axes shrink to the largest extent that still
+
+    - divides ``num_buckets`` (bucket ownership stays contiguous), and
+    - divides the old extent (every old per-device shard lands *whole* on
+      one new device when a hop checkpoint is re-sharded, so reduce groups
+      and bucket segments are never split across devices).
+
+    A flat plan shrinks its single axis; a two-level ``(dc, node)`` plan
+    keeps the DC count and shrinks the node axis (a lost node does not make
+    a data center disappear). Raises if no smaller extent qualifies (e.g. a
+    single-node axis).
+    """
+    axes = tuple(axes)
+    shape = tuple(mesh.shape[a] for a in axes)
+    total = math.prod(shape)
+    flat = list(np.asarray(mesh.devices).reshape(-1))
+    if len(flat) != total:
+        raise ValueError(f"mesh has axes {dict(mesh.shape)} beyond the "
+                         f"shuffle axes {axes}; cannot shrink")
+    if not 0 <= lost_device < total:
+        raise ValueError(f"lost_device={lost_device} out of range {total}")
+    survivors = [d for i, d in enumerate(flat) if i != lost_device]
+    if len(axes) == 1:
+        old = shape[0]
+        k = next((k for k in range(old - 1, 0, -1)
+                  if old % k == 0 and num_buckets % k == 0), None)
+        new_shape: Tuple[int, ...] = (k,) if k else ()
+    else:
+        dcs, nodes = shape
+        k = next((k for k in range(nodes - 1, 0, -1)
+                  if nodes % k == 0 and num_buckets % (dcs * k) == 0), None)
+        new_shape = (dcs, k) if k else ()
+    if not k:
+        raise ValueError(
+            f"cannot shrink mesh {shape} below the lost device while keeping "
+            f"an extent dividing num_buckets={num_buckets}")
+    keep = math.prod(new_shape)
+    return Mesh(np.array(survivors[:keep]).reshape(new_shape), axes)

@@ -1,0 +1,472 @@
+"""Fault-injection chaos suite (the test-archetype centerpiece).
+
+Headline invariant, asserted across (executor x topology x failure phase x
+seed): **the delivered multiset is unchanged under any single injected
+failure between stage A and stage B**, plus drop-count conservation and
+bounded retry counts.
+
+- HostExecutor faults run in-process against real Sector deployments in
+  tmp dirs (``kill_slave`` exercises master rerouting + §3.5.2 SPE
+  re-pooling + daemon re-replication; ``drop_bucket`` exercises the
+  ``SectorClient.recover`` mid-job re-replication path).
+- SPMDExecutor faults need 8 virtual devices, so they run batched inside
+  ``run_spmd`` subprocesses (XLA_FLAGS must be set before jax init): hop
+  checkpoints + ``elastic.shrink_mesh``/``remesh`` resume.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from test_spmd import run_spmd
+
+import jax.numpy as jnp
+
+from repro.core.mapreduce import default_hash, reduce_by_key_sum
+from repro.core.records import RecordCodec
+from repro.launch.train import make_sector
+from repro.sphere.chaos import FaultPlan, HopCheckpoint
+from repro.sphere.dataflow import Dataflow, HostExecutor, SPMDExecutor
+from repro.sphere.spe import SPE, SegmentLost
+
+NB = 8
+N_PAGES = 4
+
+
+def _emit(rec):
+    return {"key": rec["word"].astype(jnp.int32),
+            "value": jnp.ones_like(rec["word"], jnp.int32)}
+
+
+def _count(rec, valid):
+    k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+    return {"key": k, "value": v}, k >= 0, dropped
+
+
+def _pipeline():
+    codec = RecordCodec.from_fields({"word": np.uint8, "page": np.uint8})
+    return (Dataflow.source(codec)
+            .map(_emit)
+            .shuffle(by=lambda r: default_hash(r["key"], NB), num_buckets=NB)
+            .reduce(_count))
+
+
+def _pages(seed=7, n=160):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 26, size=(n, 2), dtype=np.uint8)
+
+
+def _deploy(tmp_path, pages, num_slaves=6):
+    master, client, daemon = make_sector(str(tmp_path), num_slaves=num_slaves)
+    client.upload_dataset("/web/page",
+                          [p.tobytes() for p in np.split(pages, N_PAGES)])
+    daemon.run_until_stable()
+    spes = [SPE(i, master.slaves[i].address, master, client.session_id)
+            for i in range(num_slaves)]
+    paths = [f"/web/page.{i:05d}" for i in range(N_PAGES)]
+    return master, client, daemon, spes, paths
+
+
+def _counts(res):
+    rec = res.valid_records()
+    return {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
+
+
+# -- HostExecutor chaos matrix -------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("phase", [0, 1])
+@pytest.mark.parametrize("kind", ["kill_slave", "drop_bucket"])
+def test_host_chaos_multiset_invariant(tmp_path, kind, phase, seed):
+    """One injected Sector fault at each phase boundary: the delivered
+    multiset equals the ground truth, nothing is dropped, nothing errors,
+    and retries stay bounded."""
+    pages = _pages()
+    want = dict(collections.Counter(pages[:, 0].tolist()))
+    master, client, daemon, spes, paths = _deploy(tmp_path, pages)
+    chaos = FaultPlan(kind=kind, phase=phase, seed=seed)
+    ex = HostExecutor(master, client, spes, daemon=daemon)
+    res = ex.run(_pipeline(), paths, chaos=chaos)
+
+    assert chaos.fired, chaos
+    assert not res.errors and res.data_errors == 0, res.errors
+    assert int(res.dropped) == 0                       # drop conservation
+    assert _counts(res) == want                        # multiset invariant
+    # retry bound: each segment re-pools at most max_retries + |SPE| times
+    n_segments = N_PAGES + NB
+    assert res.retries <= n_segments * (ex.max_retries + len(spes))
+    if kind == "drop_bucket":
+        # the lost bucket was re-replicated mid-job, not just rerouted
+        assert res.recoveries >= 1, chaos.events
+        assert master.stats["recoveries"] >= 1
+
+
+def test_host_chaos_is_deterministic(tmp_path):
+    """Same FaultPlan + same deployment => byte-identical fault events and
+    identical results (the suite is a property matrix, not a flake lottery)."""
+    pages = _pages()
+    runs = []
+    for sub in ("a", "b"):
+        d = tmp_path / sub
+        d.mkdir()
+        master, client, daemon, spes, paths = _deploy(d, pages)
+        chaos = FaultPlan(kind="drop_bucket", phase=0, seed=3)
+        res = HostExecutor(master, client, spes, daemon=daemon).run(
+            _pipeline(), paths, chaos=chaos)
+        runs.append((chaos.events, _counts(res)))
+    assert runs[0] == runs[1]
+
+
+def test_host_kill_slave_repools_crashed_spe(tmp_path):
+    """§3.5.2 proper: the SPE co-located with the killed slave *gets work
+    first* (it ties on distance and wins on id), crashes, and the engine
+    re-pools its segment onto the survivor — visible as retries >= 1."""
+    pages = _pages()
+    want = dict(collections.Counter(pages[:, 0].tolist()))
+    master, client, daemon, _, paths = _deploy(tmp_path, pages, num_slaves=4)
+    from repro.sector.topology import NodeAddress
+    spes = [SPE(0, master.slaves[0].address, master, client.session_id),
+            SPE(1, NodeAddress(9, 9, 9), master, client.session_id)]
+    chaos = FaultPlan(kind="kill_slave", phase=0, victim=0, wipe=True)
+    ex = HostExecutor(master, client, spes, daemon=daemon)
+    res = ex.run(_pipeline(), paths, chaos=chaos)
+    assert chaos.fired and "crashed SPEs [0]" in chaos.events[0]
+    assert res.retries >= 1, "crash was not absorbed via re-pooling"
+    assert not res.errors and _counts(res) == want
+
+
+# -- retry accounting (satellite: DATA_ERROR must be counted) ------------------
+
+
+def test_host_lost_forever_is_counted_data_error(tmp_path):
+    """A segment whose input is gone from EVERY slave (no survivor copy
+    anywhere) must not vanish silently: it is reported as a counted
+    DATA_ERROR while every other segment still delivers."""
+    pages = _pages()
+    master, client, daemon, spes, paths = _deploy(tmp_path, pages)
+    for slave in master.slaves.values():               # all copies destroyed
+        slave.drop_file(paths[0])
+    res = HostExecutor(master, client, spes, daemon=daemon).run(
+        _pipeline(), paths)
+    assert res.data_errors >= 1
+    assert any(v.startswith("DATA_ERROR") for v in res.errors.values()), \
+        res.errors
+    assert master.stats["lost_files"] >= 1
+    # the surviving 3/4 of the input still delivered
+    got = _counts(res)
+    want_survivors = collections.Counter(
+        np.concatenate(np.split(pages, N_PAGES)[1:])[:, 0].tolist())
+    assert got == dict(want_survivors)
+
+
+def test_host_udf_error_exhausts_retries_as_data_error(tmp_path):
+    """Regression (satellite): a UDF that fails deterministically exhausts
+    max_retries and surfaces as a counted DATA_ERROR in the run report —
+    previously it sat in ``errors`` unprefixed and uncounted."""
+    pages = _pages()
+    master, client, daemon, spes, paths = _deploy(tmp_path, pages)
+
+    def poisoned(rec):
+        if int(np.asarray(rec["page"]).reshape(-1)[0]) == 0:
+            raise ValueError("poisoned segment")
+        return _emit(rec)
+
+    codec = RecordCodec.from_fields({"word": np.uint8, "page": np.uint8})
+    df = (Dataflow.source(codec).map(poisoned)
+          .shuffle(by=lambda r: default_hash(r["key"], NB), num_buckets=NB)
+          .reduce(_count))
+    pages = pages.copy()
+    pages[:, 1] = np.repeat(np.arange(N_PAGES, dtype=np.uint8), 40)
+    # re-upload with the page ids that trigger the poison on slice 0
+    client.upload_dataset("/web2/page",
+                          [p.tobytes() for p in np.split(pages, N_PAGES)])
+    daemon.run_until_stable()
+    res = HostExecutor(master, client, spes, daemon=daemon).run(
+        df, [f"/web2/page.{i:05d}" for i in range(N_PAGES)])
+    # every segment of slice 0 fails; each is individually counted
+    assert res.data_errors >= 1
+    bad = [v for v in res.errors.values() if v.startswith("DATA_ERROR")]
+    assert len(bad) == res.data_errors and "poisoned" in bad[0], res.errors
+    got = _counts(res)
+    want = dict(collections.Counter(
+        np.concatenate(np.split(pages, N_PAGES)[1:])[:, 0].tolist()))
+    assert got == want
+
+
+def test_segment_lost_exception_carries_path(tmp_path):
+    """SegmentLost (data gone) is distinguishable from a plain IOError (SPE
+    crash): it is raised from the download failure and carries the Sector
+    path the recovery hook needs."""
+    pages = _pages()
+    master, client, _, spes, paths = _deploy(tmp_path, pages)
+    for slave in master.slaves.values():
+        slave.drop_file(paths[1])
+    from repro.core.stream import SegmentInfo
+    seg = SegmentInfo(0, paths[1], 0, 4)
+    with pytest.raises(SegmentLost) as ei:
+        spes[0].read_segment(seg, record_bytes=2)
+    assert ei.value.path == paths[1]
+    assert isinstance(ei.value, IOError)
+
+
+# -- chaos plan / checkpoint units ---------------------------------------------
+
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(kind="meteor_strike")
+
+
+def test_chaos_guard_rails(tmp_path):
+    """Cross-wired fault kinds and unrecoverable configurations fail loudly
+    instead of running a meaningless recovery."""
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    ex = SPMDExecutor(mesh)
+    data = {"key": np.arange(8, dtype=np.int32)}
+    with pytest.raises(ValueError, match="Sector-level fault"):
+        ex.run(Dataflow.source().map(lambda r: r), data,
+               chaos=FaultPlan(kind="kill_slave"))
+    # an auto bucket count would silently re-bucket after a mesh shrink
+    auto = Dataflow.source().shuffle(by=lambda r: r["key"] % 2)
+    with pytest.raises(ValueError, match="num_buckets"):
+        ex.run(auto, data, chaos=FaultPlan(kind="none"))
+    # carry state cannot survive a mesh re-form
+    df = Dataflow.source().map(lambda r: r)
+    with pytest.raises(ValueError, match="carry"):
+        ex.run(df, data, chaos=FaultPlan(kind="none"),
+               carry=({"key": np.zeros(2, np.int32)}, np.ones(2, bool)))
+    # device faults cannot be injected into the Sector data plane
+    pages = _pages()
+    master, client, daemon, spes, paths = _deploy(tmp_path, pages)
+    with pytest.raises(ValueError, match="device-mesh fault"):
+        HostExecutor(master, client, spes).run(
+            _pipeline(), paths, chaos=FaultPlan(kind="lose_device"))
+
+
+def test_hop_checkpoint_roundtrip_bit_identical():
+    """A HopCheckpoint is layout-agnostic bytes: snapshot -> restore on a
+    mesh reproduces every field of a mixed-dtype record pytree exactly."""
+    import jax
+    rng = np.random.default_rng(0)
+    records = {"k": rng.integers(0, 1 << 30, 16).astype(np.int32),
+               "v": rng.random((16, 3)).astype(np.float32),
+               "b": rng.integers(0, 2, 16).astype(bool)}
+    valid = rng.integers(0, 2, 16).astype(bool)
+    ckpt = HopCheckpoint.snapshot(records, valid, hop=2, dropped=5)
+    assert ckpt.payload.dtype == np.uint8 and ckpt.hop == 2
+    mesh = jax.make_mesh((1,), ("data",))
+    rec2, valid2 = ckpt.restore(mesh, ("data",))
+    for k in records:
+        np.testing.assert_array_equal(np.asarray(rec2[k]), records[k])
+        assert np.asarray(rec2[k]).dtype == records[k].dtype
+    np.testing.assert_array_equal(np.asarray(valid2), valid)
+
+
+# -- SPMDExecutor chaos (8 virtual devices, batched subprocesses) --------------
+
+
+def test_spmd_chaos_matrix():
+    """Flat and hierarchical topologies x both hop boundaries x 3 seeds:
+    segmented-with-checkpoints == fused, and an injected device loss at any
+    boundary resumes on a shrunken mesh with the multiset intact."""
+    run_spmd("""
+import collections
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.mapreduce import default_hash, reduce_by_key_sum
+from repro.sphere.chaos import FaultPlan
+from repro.sphere.dataflow import Dataflow, SPMDExecutor
+
+NB = 8
+def emit(rec):
+    return {"key": rec["word"].astype(jnp.int32),
+            "value": jnp.ones_like(rec["word"], jnp.int32)}
+def count(rec, valid):
+    k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+    return {"key": k, "value": v}, k >= 0, dropped
+df = (Dataflow.source().map(emit)
+      .shuffle(by=lambda r: default_hash(r["key"], NB), num_buckets=NB)
+      .reduce(count))
+rng = np.random.default_rng(7)
+N = 8 * 64
+words = rng.integers(0, 26, size=N).astype(np.uint8)
+want = dict(collections.Counter(words.tolist()))
+src = {"word": jnp.asarray(words)}
+
+def counts(res):
+    rec = res.valid_records()
+    return {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
+
+meshes = ((jax.make_mesh((8,), ("data",)), ("data",)),
+          (jax.make_mesh((2, 4), ("dc", "node")), ("dc", "node")))
+for mesh, axes in meshes:
+    ex = SPMDExecutor(mesh, axes=axes)
+    with mesh:
+        clean = ex.run(df, src)
+        assert counts(clean) == want
+        # segmented (per-hop checkpoints, no fault) == fused
+        seg = ex.run(df, src, chaos=FaultPlan(kind="none"))
+        assert counts(seg) == want
+        assert int(seg.dropped) == int(clean.dropped) == 0
+        for phase in (0, 1):
+            for seed in (0, 1, 2):
+                chaos = FaultPlan(kind="lose_device", phase=phase, seed=seed)
+                res = ex.run(df, src, chaos=chaos)
+                assert chaos.fired, (axes, phase, seed)
+                assert res.recoveries == 1
+                assert counts(res) == want, (axes, phase, seed)
+                assert int(res.dropped) == int(clean.dropped)  # conservation
+print("spmd chaos matrix ok")
+""")
+
+
+def test_spmd_chaos_between_two_shuffle_hops():
+    """The literal headline scenario: a pipeline with TWO shuffle stages
+    loses a device at every boundary — before stage A, between stage A and
+    stage B, and after stage B — and always delivers the fault-free
+    multiset."""
+    run_spmd("""
+import collections
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.mapreduce import default_hash, reduce_by_key_sum
+from repro.sphere.chaos import FaultPlan
+from repro.sphere.dataflow import Dataflow, SPMDExecutor
+
+NB = 8
+def emit(rec):
+    return {"key": rec["word"].astype(jnp.int32),
+            "value": jnp.ones_like(rec["word"], jnp.int32)}
+def count(rec, valid):
+    k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+    return {"key": k, "value": v}, k >= 0, dropped
+# stage A: spread by hash; stage B: regroup by key — 3 phases, 3 boundaries
+df = (Dataflow.source().map(emit)
+      .shuffle(by=lambda r: default_hash(r["key"] * 7 + 13, NB),
+               num_buckets=NB, capacity_factor=6.0)
+      .shuffle(by=lambda r: r["key"] % NB, num_buckets=NB,
+               capacity_factor=6.0)
+      .reduce(count))
+rng = np.random.default_rng(13)
+N = 8 * 64
+words = rng.integers(0, 26, size=N).astype(np.uint8)
+want = dict(collections.Counter(words.tolist()))
+src = {"word": jnp.asarray(words)}
+
+def counts(res):
+    rec = res.valid_records()
+    return {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
+
+mesh = jax.make_mesh((8,), ("data",))
+ex = SPMDExecutor(mesh)
+with mesh:
+    clean = ex.run(df, src)
+    assert counts(clean) == want and int(clean.dropped) == 0
+    for phase in (0, 1, 2):
+        for seed in (0, 1):
+            chaos = FaultPlan(kind="lose_device", phase=phase, seed=seed)
+            res = ex.run(df, src, chaos=chaos)
+            assert chaos.fired and res.recoveries == 1
+            assert counts(res) == want, (phase, seed)
+            assert int(res.dropped) == 0
+print("two-hop chaos ok")
+""")
+
+
+def test_spmd_chaos_sort_resume():
+    """Device loss against the two-stage sort: the resumed run is still a
+    globally sorted permutation of the input."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.sphere.chaos import FaultPlan
+from repro.sphere.dataflow import Dataflow, SPMDExecutor
+
+N = 8 * 128
+rng = np.random.default_rng(3)
+keys = rng.integers(0, 2**31 - 2, size=N).astype(np.int32)
+payload = np.arange(N, dtype=np.int32)
+df = Dataflow.source().sort(key=lambda r: r["key"], num_buckets=8,
+                            capacity_factor=3.0)
+src = {"key": jnp.asarray(keys), "payload": jnp.asarray(payload)}
+mesh = jax.make_mesh((8,), ("data",))
+ex = SPMDExecutor(mesh)
+with mesh:
+    clean = ex.run(df, src)
+    cvr = clean.valid_records()
+    assert int(clean.dropped) == 0
+    for seed in (0, 1):
+        chaos = FaultPlan(kind="lose_device", phase=0, seed=seed)
+        res = ex.run(df, src, chaos=chaos)
+        vr = res.valid_records()
+        assert chaos.fired and int(res.dropped) == 0
+        assert (np.diff(vr["key"]) >= 0).all()
+        assert (keys[vr["payload"]] == vr["key"]).all()   # permutation
+        np.testing.assert_array_equal(vr["key"], cvr["key"])
+print("sort resume ok")
+""")
+
+
+def test_elastic_shrink_remesh_divisor_sweep():
+    """Satellite: re-shard WireFrame tiles onto EVERY shrunken device count
+    that divides the bucket layout (8 -> 4 -> 2 -> 1), asserting the framed
+    byte rows survive each re-shard bit-identically; shrink_mesh picks
+    exactly those extents and refuses non-divisors."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.records import WireFrame
+from repro.train.elastic import remesh, shrink_mesh
+
+rng = np.random.default_rng(0)
+N = 8 * 16
+frame = WireFrame.for_payload(np.zeros((1, 4), np.int32),
+                              meta=("bucket",), explicit_valid=True)
+payload = jnp.asarray(rng.integers(0, 1 << 30, (N, 4), dtype=np.int32))
+valid = jnp.asarray(rng.integers(0, 2, N).astype(bool))
+rows = frame.frame_rows(payload, valid=valid,
+                        bucket=jnp.arange(N, dtype=jnp.int32) % 8)
+want = np.asarray(rows)
+
+mesh = jax.make_mesh((8,), ("data",))
+spec = P("data")
+tiles = jax.device_put(rows, NamedSharding(mesh, spec))
+seen = []
+NUM_BUCKETS = 8
+while mesh.devices.size > 1:
+    # lose a different device at every level; extent must divide buckets
+    mesh = shrink_mesh(mesh, ("data",), lost_device=mesh.devices.size // 2,
+                       num_buckets=NUM_BUCKETS)
+    seen.append(mesh.devices.size)
+    tiles = remesh(tiles, mesh, spec)
+    got = np.asarray(tiles)
+    assert got.dtype == np.uint8
+    np.testing.assert_array_equal(got, want)   # bit-identical rows
+    # and the decoded payload/validity survive too (invalid rows are
+    # zeroed by framing, so compare payload under the mask)
+    p2, v2, m2 = frame.open_rows(jnp.asarray(got))
+    v = np.asarray(valid)
+    np.testing.assert_array_equal(np.asarray(v2), v)
+    np.testing.assert_array_equal(np.asarray(p2)[v], np.asarray(payload)[v])
+assert seen == [4, 2, 1], seen                 # every dividing count
+
+# hierarchical: a lost node shrinks the node axis, never the dc axis
+m2 = jax.make_mesh((2, 4), ("dc", "node"))
+s2 = shrink_mesh(m2, ("dc", "node"), lost_device=5, num_buckets=8)
+assert dict(s2.shape) == {"dc": 2, "node": 2}
+survivors = [d.id for d in np.asarray(s2.devices).reshape(-1)]
+assert 5 not in survivors and len(survivors) == 4
+
+# no usable smaller extent -> loud refusal, not silent re-bucketing
+one = Mesh(np.array(jax.devices()[:1]), ("data",))
+try:
+    shrink_mesh(one, ("data",), lost_device=0, num_buckets=8)
+    raise AssertionError("shrink below 1 device did not raise")
+except ValueError as e:
+    assert "cannot shrink" in str(e)
+# extent must divide num_buckets: 8 devices, 7 buckets -> largest is 1
+s3 = shrink_mesh(jax.make_mesh((8,), ("data",)), ("data",),
+                 lost_device=0, num_buckets=7)
+assert s3.devices.size == 1
+print("divisor sweep ok")
+""")

@@ -173,3 +173,103 @@ def test_storage_mode_read_amplification():
     block_line = next(l for l in lines if l.startswith("storage_block"))
     assert "read_transfers_per_file=1" in file_line
     assert "read_transfers_per_file=8" in block_line
+
+
+# -- mid-job recovery + periodic replication (chaos PR satellites) -------------
+
+
+def test_replica_count_convergence_after_slave_death(tmp_path):
+    """After a slave dies, run_until_stable converges every file back to
+    exactly replication_factor live copies — and a further pass is a no-op
+    (fixpoint, no over-replication)."""
+    _, m = make_deployment(tmp_path)
+    c = SectorClient(m, "u", "pw")
+    for i in range(3):
+        c.upload(f"/d/f{i}.dat", bytes([i]) * 300)
+    d = ReplicationDaemon(m)
+    d.run_until_stable()
+    victim = next(iter(m.lookup("/d/f0.dat").locations))
+    m.slaves[victim].kill(wipe=True)
+    d.run_until_stable()
+    for i in range(3):
+        live = [s for s in m.lookup(f"/d/f{i}.dat").locations
+                if m.slaves[s].alive]
+        assert len(live) == m.replication_factor, f"/d/f{i}.dat"
+    assert d.run_until_stable() == 0           # converged: nothing to do
+
+
+def test_no_replication_storm_on_flapping_slave(tmp_path):
+    """The paper's replication is lazy and *periodic*: a slave flapping
+    faster than the period must not trigger a copy per flap. With a 10s
+    period and 30 one-second flaps, at most ceil(30/10)+1 effective ticks
+    run; without the period every flap would replicate."""
+    _, m = make_deployment(tmp_path, replication=2)
+    c = SectorClient(m, "u", "pw")
+    c.upload("/d/flap.dat", b"f" * 200)
+    clock = [0.0]
+    d = ReplicationDaemon(m, period=10.0, clock=lambda: clock[0])
+    d.run_until_stable()
+    base = m.stats["replications"]
+    victim = next(iter(m.lookup("/d/flap.dat").locations))
+    for _ in range(30):
+        m.slaves[victim].kill(wipe=False)      # flap down...
+        d.tick()                               # chaos monkey pokes the timer
+        m.slaves[victim].restart()             # ...and right back up
+        clock[0] += 1.0
+    made = m.stats["replications"] - base
+    assert made <= 4, f"replication storm: {made} copies for 30 flaps"
+    # the timer only *defers*: once the slave stays dead past the period,
+    # the next tick restores the factor
+    m.slaves[victim].kill(wipe=True)
+    clock[0] += 10.0
+    d.tick()
+    live = [s for s in m.lookup("/d/flap.dat").locations if m.slaves[s].alive]
+    assert len(live) >= m.replication_factor
+
+
+def test_lost_then_recovered_bucket_roundtrip(tmp_path):
+    """A file vanishes from every slave the index lists while an unlisted
+    copy survives (stale metadata): download fails, ``client.recover``
+    prunes the stale locations, rediscovers the survivor by directory scan
+    (§2.2), re-replicates to factor, and the download round-trips."""
+    _, m = make_deployment(tmp_path)
+    c = SectorClient(m, "u", "pw", client_addr=NodeAddress(0, 0, 0))
+    data = b"bucket-bytes" * 50
+    c.upload("/job/bucket.00001", data)
+    ReplicationDaemon(m).run_until_stable()
+    meta = m.lookup("/job/bucket.00001")
+    listed = set(meta.locations)
+    survivor = next(s for s in m.live_slaves() if s.slave_id not in listed)
+    survivor.write_file("/job/bucket.00001", data)   # behind the master's back
+    for sid in listed:
+        m.slaves[sid].drop_file("/job/bucket.00001")
+    with pytest.raises(IOError):
+        c.download("/job/bucket.00001")
+    recovered = c.recover("/job/bucket.00001")
+    assert survivor.slave_id in recovered.locations
+    # no stale entries survive: every listed location really holds the bytes
+    # (re-replication may legally re-use a formerly-stale slave)
+    assert all(m.slaves[s].has_file("/job/bucket.00001")
+               for s in recovered.locations)
+    assert len(recovered.locations) == m.replication_factor
+    assert c.download("/job/bucket.00001") == data
+    assert m.stats["recoveries"] >= 1
+
+
+def test_recover_raises_when_all_copies_gone(tmp_path):
+    """No survivor anywhere: recover must fail loudly (counted as a lost
+    file), never fabricate data."""
+    _, m = make_deployment(tmp_path)
+    c = SectorClient(m, "u", "pw")
+    c.upload("/d/gone.dat", b"g" * 100)
+    ReplicationDaemon(m).run_until_stable()
+    for s in m.slaves.values():
+        s.drop_file("/d/gone.dat")
+    with pytest.raises(IOError, match="no surviving replica"):
+        c.recover("/d/gone.dat")
+    assert m.stats["lost_files"] >= 1
+    # a healthy file is untouched by a (pointless but legal) recover call
+    c.upload("/d/fine.dat", b"ok" * 50)
+    before = m.stats["recoveries"]
+    c.recover("/d/fine.dat")
+    assert c.download("/d/fine.dat") == b"ok" * 50
