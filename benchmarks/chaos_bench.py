@@ -167,6 +167,7 @@ def _merge_json(json_path: str, res: Dict[str, object]) -> None:
         payload = {"schema": "repro.kernel_bench.v1", "results": {}}
     payload.setdefault("results", {})
     payload["results"]["chaos_recovery_overhead"] = {
+        "owner": "chaos",
         "value": res["recovery_overhead"],
         "checkpoint_overhead": res["checkpoint_overhead"],
         "clean_us": res["clean_us"],

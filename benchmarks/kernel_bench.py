@@ -52,6 +52,12 @@ import numpy as np
 
 from repro.core.records import WireFrame
 from repro.kernels import ops, ref
+from repro.obs.metrics import REGISTRY
+
+#: every row this bench writes into BENCH_kernels.json is stamped with this
+#: owner; the merge keeps prior rows stamped by OTHER owners (streaming,
+#: chaos, obs benches) and rewrites only its own.
+OWNER = "kernel"
 
 
 def _time(fn, *args, iters=5) -> float:
@@ -201,7 +207,8 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
 
     def record(name: str, t: float, elems: int, extra: str = ""):
         results[name] = {"us_per_call": t * 1e6,
-                         "melem_per_s": elems / t / 1e6}
+                         "melem_per_s": elems / t / 1e6,
+                         "owner": OWNER}
         lines.append(f"kernel_{name},{t * 1e6:.1f},"
                      f"{elems / t / 1e6:.2f}Melem/s{extra}")
 
@@ -231,7 +238,8 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
            extra=f" speedup_vs_argsort={t_arg / t_fused:.2f}x")
     record("partition_pack_pallas_interp", t_fused_k, n)
     results["partition_speedup_vs_argsort"] = {
-        "ratio": t_arg / t_fused, "n": n, "num_dest": num_dest}
+        "ratio": t_arg / t_fused, "n": n, "num_dest": num_dest,
+        "owner": OWNER}
 
     # -- bitonic sort (multi-segment blocks) ----------------------------------
     rows, cols = 8, 4096
@@ -255,12 +263,18 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
     record("segmented_sort_1x65536_pallas_interp", t_one, r)
     record("segmented_sort_16x4096_oracle",
            _time(lambda x: ref.sort_segments_ref(x), seg), r)
+    # published through the metrics registry too, so one snapshot carries
+    # the perf trajectory alongside the runtime series
+    REGISTRY.gauge("kernel.segmented_speedup_vs_single").set(t_one / t_seg)
     results["segmented_speedup_vs_single"] = {
-        "ratio": t_one / t_seg, "r": r, "bpd": bpd}
+        "ratio": t_one / t_seg, "r": r, "bpd": bpd, "owner": OWNER,
+        "metric": "kernel.segmented_speedup_vs_single",
+        "registry_value": REGISTRY.gauge(
+            "kernel.segmented_speedup_vs_single").value}
 
     # -- one-wire-tensor shuffle: wire bytes + collective counts per hop ------
     wb = wire_bytes_per_hop()
-    results["wire_bytes_per_hop"] = wb
+    results["wire_bytes_per_hop"] = dict(wb, owner=OWNER)
     lines.append(
         f"kernel_wire_bytes_per_hop,0,"
         f"legacy={wb['legacy_4tensor_bytes']} "
@@ -269,7 +283,7 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
         f"(int32-pair records, {wb['num_dest']} dests, "
         f"cap={wb['capacity']})")
     cc = collectives_per_hop()
-    results["collectives_per_hop"] = cc
+    results["collectives_per_hop"] = dict(cc, owner=OWNER)
     lines.append(
         f"kernel_collectives_per_hop,0,"
         f"flat={cc['flat_shuffle']} hier={cc['hier_shuffle']} "
@@ -281,15 +295,16 @@ def run(csv: bool = True, json_path: str | None = None) -> List[str]:
 
     if json_path:
         from repro.kernels.ops import _interpret_default
-        # the streaming soak (benchmarks/streaming_bench.py) and the chaos
-        # bench (benchmarks/chaos_bench.py) merge their stream_* / chaos_*
-        # trajectory points into the same file — keep them alive across
-        # kernel-bench rewrites
+        # other benches (streaming, chaos, obs) merge their trajectory
+        # points into the same file, each stamped with an "owner" field —
+        # keep every row another owner wrote, rewrite only our own.
+        # Rows without an owner stamp are legacy kernel rows.
         try:
             with open(json_path) as f:
                 prior = json.load(f).get("results", {})
             results.update({k: v for k, v in prior.items()
-                            if k.startswith(("stream_", "chaos_"))
+                            if isinstance(v, dict)
+                            and v.get("owner", OWNER) != OWNER
                             and k not in results})
         except (OSError, ValueError):
             pass

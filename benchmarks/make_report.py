@@ -1,15 +1,38 @@
 """Render the EXPERIMENTS.md roofline tables from the dry-run artifacts
-(baseline + optimized) and splice them into the markers."""
+(baseline + optimized) and splice them into the markers.
+
+Also hosts :func:`phase_table`, the markdown renderer for the host
+executor's ``DataflowResult.phase_times`` — per-phase wall time is
+recorded unconditionally (a cheap monotonic pair), so a phase breakdown is
+printable from any run without attaching a tracer."""
 
 from __future__ import annotations
 
 import json
 import os
 import sys
+from typing import Any, Dict, List
 
 from benchmarks.roofline import load_rows
 
 BASE = os.path.join(os.path.dirname(__file__), "results")
+
+
+def phase_table(phase_times: List[Dict[str, Any]]) -> str:
+    """Markdown table from ``DataflowResult.phase_times`` (host executor):
+    one row per phase with wall / engine / materialize seconds and the
+    fault-tolerance counters."""
+    hdr = ("| phase | terminator | wall_s | engine_s | materialize_s | "
+           "segments | retries | recoveries | data_errors |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for p in phase_times:
+        lines.append(
+            f"| {p['phase']} | {p['terminator']} | {p['seconds']:.3f} "
+            f"| {p['engine_s']:.3f} | {p['materialize_s']:.3f} "
+            f"| {p['segments']} | {p['retries']} | {p['recoveries']} "
+            f"| {p['data_errors']} |")
+    return "\n".join(lines)
 
 
 def key(r):

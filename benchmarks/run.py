@@ -12,7 +12,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (kernel_bench, moe_dispatch, roofline,
+    from benchmarks import (kernel_bench, moe_dispatch, obs_bench, roofline,
                             scalability, sdss_distribution, storage_modes,
                             streaming_bench, terasort, wan_shuffle)
     sections = {
@@ -24,6 +24,7 @@ def main() -> None:
         "moe_dispatch": moe_dispatch.run,    # §3.6 generalization
         "kernels": kernel_bench.run,
         "streaming": streaming_bench.run,    # §3.2 continuous micro-batches
+        "obs": obs_bench.run,                # tracing/metrics overhead gate
         "roofline": roofline.run,            # dry-run aggregation
     }
     want = sys.argv[1:] or list(sections)

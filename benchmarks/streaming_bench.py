@@ -227,15 +227,18 @@ def _merge_json(json_path: str, res: Dict[str, object]) -> None:
         payload = {"schema": "repro.kernel_bench.v1", "results": {}}
     payload.setdefault("results", {})
     payload["results"]["stream_records_per_s"] = {
+        "owner": "stream",
         "value": res["records_per_s"], "micro_batch": res["micro_batch"],
         "tenants": res["tenants"], "steps": res["steps"],
         "ndev": res["ndev"],
     }
     payload["results"]["stream_p99_latency"] = {
+        "owner": "stream",
         "ms": res["p99_latency_ms"], "p50_ms": res["p50_latency_ms"],
         "note": res["latency_unit_note"],
     }
     payload["results"]["stream_soak"] = {
+        "owner": "stream",
         "fair_share_rel": res["fair_share_rel"],
         "cache_misses": res["cache"]["misses"],
         "timeouts": res["timeouts"], "requeues": res["requeues"],

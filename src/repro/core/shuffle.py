@@ -75,9 +75,10 @@ All shuffle functions here run **inside** ``shard_map`` and communicate via
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +155,27 @@ def _a2a(x: jax.Array, axis_name: str) -> jax.Array:
                               tiled=True)
 
 
+#: host-side hop-geometry sink. Shuffle hops run inside traced code, so a
+#: per-run byte counter is impossible without shipping extra scalars; the
+#: geometry, however, is static. Wrapping *lowering* in :func:`record_hops`
+#: captures, exactly once per compile, every hop the program will execute
+#: (wire bytes per device, chunk rounds, destinations) — the SPMD executor
+#: stores the list with the compiled program and replays it per run.
+_HOP_SINK: Optional[List[dict]] = None
+
+
+@contextlib.contextmanager
+def record_hops(sink: List[dict]):
+    """Collect one dict per shuffle hop traced inside the ``with`` block."""
+    global _HOP_SINK
+    prev = _HOP_SINK
+    _HOP_SINK = sink
+    try:
+        yield sink
+    finally:
+        _HOP_SINK = prev
+
+
 def _wire_exchange(
     frame: WireFrame,
     payload: jax.Array,
@@ -177,6 +199,14 @@ def _wire_exchange(
     n = framed.shape[0]
     w = max(int(chunks), 1)
     cap_c = -(-capacity // w)
+    if _HOP_SINK is not None:
+        _HOP_SINK.append({
+            "axis": axis_name, "num_dest": num_dest, "capacity": capacity,
+            "chunks": w, "row_nbytes": frame.row_nbytes,
+            "tile_nbytes": frame.tile_nbytes(cap_c),
+            "wire_bytes_per_device": w * num_dest * frame.tile_nbytes(cap_c),
+            "meta": list(frame.meta),
+        })
     nc = -(-n // w) if n else 0
     if w * nc != n:  # pad the stream so chunks are equal-shaped; padding
         pad = w * nc - n  # rows route to the virtual overflow destination

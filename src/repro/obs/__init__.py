@@ -1,0 +1,18 @@
+"""Observability for the Sphere repro: span tracing + metrics registry.
+
+- :mod:`repro.obs.trace` — zero-dependency nested-span tracer with explicit
+  clock injection (the same virtual-clock discipline as ``TenantQueue`` /
+  ``ReplicationDaemon``), Chrome/Perfetto ``trace_event`` export and a
+  plain-text flame summary.
+- :mod:`repro.obs.metrics` — process-wide registry of counters, gauges and
+  fixed-bucket histograms behind one ``snapshot()`` / ``to_json()`` API.
+
+Both executors accept a tracer (``Dataflow.run(executor, data, trace=...)``)
+and publish into the default registry; see docs/OBSERVABILITY.md.
+"""
+
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Span, TraceBuffer, Tracer
+
+__all__ = ["Tracer", "TraceBuffer", "Span", "NULL_TRACER",
+           "MetricsRegistry", "REGISTRY"]

@@ -13,13 +13,15 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import Model
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -56,15 +58,20 @@ class ServeReport(list):
 class ServeEngine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
                  max_len: int = 256, temperature: float = 0.0, seed: int = 0,
-                 tenants=None):
+                 tenants=None, trace: Optional[Any] = None):
         """``tenants``: optional :class:`repro.sphere.streaming.TenantQueue`
         (duck-typed). When given, the continuous-batching refill pulls from
         it instead of the plain FIFO: slot refills follow priority classes
         and weighted fair share, queue-waits past a request's deadline
         requeue it (bounded retries), and ``submit`` raises
         :class:`repro.sphere.streaming.QueueFull` as backpressure. Engine
-        time is the step counter, so deadlines are in steps."""
+        time is the step counter, so deadlines are in steps.
+
+        ``trace``: a :class:`repro.obs.trace.Tracer`; each engine
+        iteration becomes a ``serve.step[i]`` span annotated with active
+        slots and tokens emitted."""
         self.model = model
+        self.trace = trace if trace is not None else NULL_TRACER
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
@@ -148,6 +155,22 @@ class ServeEngine:
     def step(self) -> List[Request]:
         """One engine iteration: refill slots, decode one token for every
         active slot, emit finished requests."""
+        tr = self.trace
+        with tr.span(f"serve.step[{self.step_count + 1}]") as sp:
+            finished = self._step()
+            active = sum(r is not None for r in self.active)
+            if tr.enabled:
+                sp.set(active_slots=active, finished=len(finished))
+            if active or finished:
+                REGISTRY.counter("serve.steps").inc()
+                # every slot active during decode emitted one token,
+                # including the ones that finished on it
+                REGISTRY.counter("serve.tokens").inc(active + len(finished))
+            if finished:
+                REGISTRY.counter("serve.finished").inc(len(finished))
+        return finished
+
+    def _step(self) -> List[Request]:
         self.step_count += 1
         if self.tenants is not None:
             self.tenants.expire(float(self.step_count))

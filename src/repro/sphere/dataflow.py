@@ -57,8 +57,10 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import time
 from collections import OrderedDict, namedtuple
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -66,9 +68,12 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.introspect import collective_counts
 from repro.core.records import RecordCodec
-from repro.core.shuffle import ShufflePlan
+from repro.core.shuffle import ShufflePlan, record_hops
 from repro.kernels import ops as kops
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import NULL_TRACER
 
 _KEY_MAX = np.iinfo(np.int32).max
 
@@ -169,6 +174,23 @@ class Dataflow:
                 parts.append(f"sort[{st.num_buckets or 'auto'}]")
         return " |> ".join(parts)
 
+    def run(self, executor: Any, data: Any, **kwargs: Any) -> "DataflowResult":
+        """The paper's §3.1 client call, executor-polymorphic:
+        ``df.run(spmd_executor, records, trace=tracer)`` or
+        ``df.run(host_executor, sector_paths)``. All keyword arguments
+        (``trace=``, ``chaos=``, ``valid=``, ...) pass through to the
+        executor's ``run``; the result's ``trace`` handle carries the
+        tracer back (``result.trace.to_perfetto("trace.json")``)."""
+        return executor.run(self, data, **kwargs)
+
+    def run_stream(self, inner: "SPMDExecutor", micro_batch: int,
+                   **kwargs: Any) -> Any:
+        """Wrap this ``stream_source`` pipeline in a
+        :class:`repro.sphere.streaming.StreamExecutor` (accepts
+        ``carry_capacity=``, ``queue=``, ``clock=``, ``trace=``)."""
+        from repro.sphere.streaming import StreamExecutor
+        return StreamExecutor(inner, self, micro_batch, **kwargs)
+
 
 @dataclasses.dataclass
 class DataflowResult:
@@ -196,6 +218,15 @@ class DataflowResult:
     #: run produced (None on one-shot runs) — feed it back as the next
     #: micro-batch's ``carry``. See :mod:`repro.sphere.streaming`.
     carry: Optional[Tuple[Any, Any]] = None
+    #: the tracer this run recorded into (None when untraced) — call
+    #: ``result.trace.to_perfetto("trace.json")`` / ``result.trace.flame()``.
+    trace: Optional[Any] = None
+    #: host executor: one dict per phase with wall-clock accounting
+    #: (``seconds``, ``engine_s``, ``materialize_s``, segments, retries,
+    #: recoveries) — populated even without a tracer, so
+    #: ``benchmarks/make_report.py`` can print a phase table.
+    phase_times: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)
 
     def valid_records(self) -> Any:
         """Dense numpy view: only real records, in device/bucket order."""
@@ -254,6 +285,26 @@ CacheInfo = namedtuple("CacheInfo",
                        ["hits", "misses", "evictions", "currsize", "maxsize"])
 
 
+class _CacheEntry(NamedTuple):
+    """One compiled program. ``fn`` is the AOT-compiled executable
+    (``jit(...).lower(args).compile()`` — compile cost is paid exactly once
+    per entry, separable from execute time under a tracer). ``hops`` is the
+    static shuffle-hop geometry captured at lowering time via
+    :func:`repro.core.shuffle.record_hops`; ``collectives`` the jaxpr
+    collective counts (only computed when the entry was built under an
+    active tracer — the extra trace is not free)."""
+
+    pipeline: "Dataflow"
+    fn: Callable
+    has_sort: bool
+    hops: List[dict]
+    collectives: Optional[Dict[str, int]]
+
+
+_STAGE_KIND = {MapStage: "map", ShuffleStage: "shuffle",
+               ReduceStage: "reduce", SortStage: "sort"}
+
+
 # -- SPMD executor -----------------------------------------------------------
 
 
@@ -294,19 +345,23 @@ class SPMDExecutor:
         self.chunks = chunks
         self.cache_size = cache_size
         self.debug_checks = debug_checks
-        # LRU keyed on (pipeline id, plan, shapes/dtypes). Entries hold a
-        # strong ref to the pipeline: while cached, its id() cannot be
+        # LRU keyed on (pipeline id, plan, shapes/dtypes/shardings). Entries
+        # hold a strong ref to the pipeline: while cached, its id() cannot be
         # reused by a new object, so an id-keyed hit is always the same
-        # pipeline; eviction drops the ref together with the entry.
-        self._cache: "OrderedDict[Any, Tuple[Dataflow, Callable, bool]]" = \
-            OrderedDict()
+        # pipeline; eviction drops the ref together with the entry. Input
+        # shardings are part of the key because entries store AOT-compiled
+        # executables, which (unlike jit dispatch) do not re-specialize when
+        # a committed input arrives with a different sharding.
+        self._cache: "OrderedDict[Any, _CacheEntry]" = OrderedDict()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
-        # chaos/resume machinery: per-hop sub-pipelines (pinning their parent
-        # so id()-keyed lookups stay sound) and sub-executors per mesh, so
-        # repeated chaos runs reuse compiled per-hop programs
-        self._subflows: Dict[Tuple[int, int], Tuple[Dataflow, Dataflow]] = {}
+        self._last_entry: Optional[_CacheEntry] = None
+        # chaos/resume + staged-trace machinery: per-hop/per-stage
+        # sub-pipelines (pinning their parent so id()-keyed lookups stay
+        # sound) and sub-executors per mesh, so repeated runs reuse
+        # compiled sub-programs
+        self._subflows: Dict[Tuple, Tuple[Dataflow, Dataflow]] = {}
         self._sub_execs: Dict[Any, "SPMDExecutor"] = {}
 
     @property
@@ -323,7 +378,9 @@ class SPMDExecutor:
     def run(self, pipeline: Dataflow, records: Any,
             valid: Optional[Any] = None,
             carry: Optional[Tuple[Any, Any]] = None,
-            chaos: Optional[Any] = None) -> DataflowResult:
+            chaos: Optional[Any] = None,
+            trace: Optional[Any] = None,
+            trace_stages: bool = False) -> DataflowResult:
         """Execute ``pipeline`` over ``records`` sharded along ``axes``.
 
         ``records``: pytree of global arrays (or a
@@ -346,13 +403,33 @@ class SPMDExecutor:
         carries the reduce output back out, compacted to the same fixed
         capacity (overflow is dropped and counted). Requires the reduce UDF
         to be schema-preserving; see :mod:`repro.sphere.streaming`.
+
+        ``trace``: a :class:`repro.obs.trace.Tracer`. The run records
+        lower/compile/execute spans (compile separated from execute by AOT
+        compilation; execute fenced with ``block_until_ready`` so the span
+        covers real device time) with wire-byte, chunk-round and drop
+        attributes, and publishes wire-bytes / collective / drop counters
+        to the metrics registry. Untraced runs skip everything that would
+        force a device sync.
+
+        ``trace_stages``: with a tracer, run one compiled program per stage
+        instead of the fused program, so every stage and every shuffle/sort
+        hop gets its own span. A profiling mode — per-stage dispatch has
+        real overhead and is NOT held to the obs_bench <5% bound.
         """
         from repro.core.stream import SphereStream
         if isinstance(records, SphereStream):
             valid = records.valid if valid is None else valid
             records = records.data
+        tr = trace if trace is not None else NULL_TRACER
         if chaos is not None:
-            return self._run_segmented(pipeline, records, valid, carry, chaos)
+            return self._run_segmented(pipeline, records, valid, carry,
+                                       chaos, tr)
+        if trace_stages and tr.enabled:
+            if carry is not None:
+                raise ValueError("trace_stages does not compose with "
+                                 "streaming carry state")
+            return self._run_staged(pipeline, records, valid, tr)
         records = jax.tree.map(jnp.asarray, records)
         n = _leading(records)
         if valid is None:
@@ -369,36 +446,144 @@ class SPMDExecutor:
         leaves = jax.tree.leaves(records)
         key = (id(pipeline), self.plan, self.chunks,
                jax.tree.structure(records),
-               tuple((tuple(l.shape), str(l.dtype)) for l in leaves), ckey)
-        entry = self._cache.get(key)
-        if entry is None:
-            self._misses += 1
-            fn = self._lower(pipeline, with_carry=carry is not None)
-            has_sort = any(isinstance(s, SortStage) for s in pipeline.stages)
-            self._cache[key] = entry = (pipeline, fn, has_sort)
-            if len(self._cache) > self.cache_size:
-                self._cache.popitem(last=False)
-                self._evictions += 1
-        else:
-            self._hits += 1
-            self._cache.move_to_end(key)
-        if carry is not None:
-            (out_records, out_valid, dropped, sentinel_hits,
-             c_rec, c_valid) = entry[1](records, valid, carry[0], carry[1])
-            out_carry = (c_rec, c_valid)
-        else:
-            out_records, out_valid, dropped, sentinel_hits = entry[1](records,
-                                                                     valid)
-            out_carry = None
-        if self.debug_checks and entry[2] and int(sentinel_hits) > 0:
-            raise ValueError(
-                f"{int(sentinel_hits)} record key(s) equal INT32_MAX, which "
-                f"is reserved as the stage-2 sort padding sentinel — they "
-                f"would be silently treated as padding. Rescale the sort "
-                f"keys below 2**31-1 (or pass debug_checks=False to accept "
-                f"the old silent behaviour).")
+               tuple((tuple(l.shape), str(l.dtype),
+                      str(getattr(l, "sharding", None))) for l in leaves),
+               ckey)
+        args = ((records, valid, carry[0], carry[1]) if carry is not None
+                else (records, valid))
+        with tr.span("spmd.run", pipeline=pipeline.describe(),
+                     records=n) as root:
+            entry = self._cache.get(key)
+            if entry is None:
+                root.set(cache="miss")
+                entry = self._compile_entry(pipeline, args,
+                                            carry is not None, key, tr)
+            else:
+                self._hits += 1
+                REGISTRY.counter("spmd.cache.hits").inc()
+                self._cache.move_to_end(key)
+                root.set(cache="hit")
+            self._last_entry = entry
+            with tr.span("spmd.execute", hops=len(entry.hops)):
+                out = entry.fn(*args)
+                if tr.enabled:
+                    # fence: the span must cover device time, not dispatch
+                    out = jax.block_until_ready(out)
+            if carry is not None:
+                (out_records, out_valid, dropped, sentinel_hits,
+                 c_rec, c_valid) = out
+                out_carry = (c_rec, c_valid)
+            else:
+                out_records, out_valid, dropped, sentinel_hits = out
+                out_carry = None
+            if self.debug_checks and entry.has_sort and int(sentinel_hits) > 0:
+                raise ValueError(
+                    f"{int(sentinel_hits)} record key(s) equal INT32_MAX, "
+                    f"which is reserved as the stage-2 sort padding sentinel "
+                    f"— they would be silently treated as padding. Rescale "
+                    f"the sort keys below 2**31-1 (or pass "
+                    f"debug_checks=False to accept the old silent "
+                    f"behaviour).")
+            self._record_run(entry, n, dropped, tr, root)
         return DataflowResult(records=out_records, valid=out_valid,
-                              dropped=dropped, carry=out_carry)
+                              dropped=dropped, carry=out_carry, trace=trace)
+
+    # -- compile + per-run accounting -----------------------------------------
+    def _compile_entry(self, pipeline: Dataflow, args: Tuple,
+                       with_carry: bool, key, tr) -> _CacheEntry:
+        self._misses += 1
+        REGISTRY.counter("spmd.cache.misses").inc()
+        hops: List[dict] = []
+        with tr.span("spmd.lower", pipeline=pipeline.describe()):
+            jitted = self._lower(pipeline, with_carry=with_carry)
+            with record_hops(hops):
+                lowered = jitted.lower(*args)
+        with tr.span("spmd.compile"):
+            fn = lowered.compile()
+        collectives = None
+        if tr.enabled:
+            with tr.span("spmd.introspect"):
+                collectives = collective_counts(jitted, *args)
+        entry = _CacheEntry(
+            pipeline=pipeline, fn=fn,
+            has_sort=any(isinstance(s, SortStage) for s in pipeline.stages),
+            hops=hops, collectives=collectives)
+        self._cache[key] = entry
+        if len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+            self._evictions += 1
+            REGISTRY.counter("spmd.cache.evictions").inc()
+        return entry
+
+    def _record_run(self, entry: _CacheEntry, n: int, dropped, tr,
+                    root) -> None:
+        """Publish per-run metrics. Wire bytes replay the hop geometry
+        captured at lowering time; drop counts force a device sync, so they
+        are only recorded under an active tracer."""
+        m = REGISTRY
+        m.counter("spmd.runs").inc()
+        m.counter("spmd.records_in").inc(n)
+        wire = 0
+        if entry.hops:
+            wire = (sum(h["wire_bytes_per_device"] for h in entry.hops)
+                    * self.axis_size)
+            m.counter("spmd.shuffle.wire_bytes").inc(wire)
+            m.counter("spmd.shuffle.hops").inc(len(entry.hops))
+        if not tr.enabled:
+            return
+        d = int(dropped)
+        m.counter("spmd.dropped").inc(d)
+        if entry.collectives is not None:
+            m.counter("spmd.collectives.all_to_all").inc(
+                entry.collectives.get("all_to_all", 0))
+        root.set(dropped=d, wire_bytes=wire,
+                 hops=[{k: h[k] for k in ("axis", "num_dest", "chunks",
+                                          "wire_bytes_per_device")}
+                       for h in entry.hops])
+
+    # -- per-stage traced execution -------------------------------------------
+    def _stage_flow(self, pipeline: Dataflow, i: int) -> Dataflow:
+        key = (id(pipeline), "stage", i)
+        hit = self._subflows.get(key)
+        if hit is not None and hit[0] is pipeline:
+            return hit[1]
+        sub = Dataflow(stages=(pipeline.stages[i],), codec=pipeline.codec)
+        self._subflows[key] = (pipeline, sub)
+        return sub
+
+    def _run_staged(self, df: Dataflow, records: Any, valid: Any,
+                    tr) -> DataflowResult:
+        """One compiled program per stage, so every stage — and every
+        shuffle/sort hop — is its own span with wire-byte and chunk
+        attributes. Delivers the same records as the fused program (each
+        stage is a one-stage sub-pipeline over the identical shard
+        layout)."""
+        records = jax.tree.map(jnp.asarray, records)
+        if valid is None:
+            valid = jnp.ones((_leading(records),), jnp.bool_)
+        total_dropped = 0
+        with tr.span("spmd.run.staged", pipeline=df.describe(),
+                     stages=len(df.stages)) as root:
+            for i, stage in enumerate(df.stages):
+                kind = _STAGE_KIND[type(stage)]
+                name = (f"hop[{i}]:{kind}" if kind in ("shuffle", "sort")
+                        else f"stage[{i}]:{kind}")
+                with tr.span(name) as sp:
+                    res = self.run(self._stage_flow(df, i), records,
+                                   valid=valid, trace=tr)
+                    records, valid = res.records, res.valid
+                    d = int(res.dropped)
+                    total_dropped += d
+                    attrs: Dict[str, Any] = {"dropped": d}
+                    entry = self._last_entry
+                    if entry is not None and entry.hops:
+                        attrs["wire_bytes_per_device"] = sum(
+                            h["wire_bytes_per_device"] for h in entry.hops)
+                        attrs["chunks"] = entry.hops[0]["chunks"]
+                    sp.set(**attrs)
+            root.set(dropped=total_dropped)
+        return DataflowResult(records=records, valid=valid,
+                              dropped=total_dropped, trace=tr)
 
     # -- segmented execution + device-loss recovery ---------------------------
     def _sub_executor(self, mesh: Mesh) -> "SPMDExecutor":
@@ -424,7 +609,7 @@ class SPMDExecutor:
         return sub
 
     def _run_segmented(self, pipeline: Dataflow, records: Any, valid: Any,
-                       carry, chaos) -> DataflowResult:
+                       carry, chaos, tr=NULL_TRACER) -> DataflowResult:
         """Run ``pipeline`` one shuffle-hop phase at a time, sealing a
         :class:`~repro.sphere.chaos.HopCheckpoint` at every boundary; on an
         injected device loss, re-form the largest usable smaller mesh
@@ -477,21 +662,28 @@ class SPMDExecutor:
             ckpt = HopCheckpoint.snapshot(records, valid, pi, dropped)
             lost = chaos.fire_spmd(pi, exec_.axis_size)
             if lost is not None:
-                new_mesh = elastic.shrink_mesh(exec_.mesh, self.axes, lost,
-                                               nb_constraint)
-                exec_ = self._sub_executor(new_mesh)
-                records, valid = ckpt.restore(new_mesh, self.axes)
-                dropped = ckpt.dropped
-                recoveries += 1
+                with tr.span(f"recover[{pi}]", lost_device=lost):
+                    new_mesh = elastic.shrink_mesh(exec_.mesh, self.axes,
+                                                   lost, nb_constraint)
+                    exec_ = self._sub_executor(new_mesh)
+                    records, valid = ckpt.restore(new_mesh, self.axes)
+                    dropped = ckpt.dropped
+                    recoveries += 1
+                    REGISTRY.counter("spmd.recoveries").inc()
                 chaos.events.append(
                     f"resumed hop {pi} on mesh "
                     f"{dict(zip(self.axes, (new_mesh.shape[a] for a in self.axes)))}")
-            res = exec_.run(self._subflow(pipeline, pi, phase), records,
-                            valid=valid)
-            records, valid = res.records, res.valid
-            dropped += int(res.dropped)
+            with tr.span(f"phase[{pi}]", devices=exec_.axis_size) as psp:
+                res = exec_.run(self._subflow(pipeline, pi, phase), records,
+                                valid=valid,
+                                trace=tr if tr.enabled else None)
+                records, valid = res.records, res.valid
+                d = int(res.dropped)
+                dropped += d
+                psp.set(dropped=d)
         return DataflowResult(records=records, valid=valid,
-                              dropped=dropped, recoveries=recoveries)
+                              dropped=dropped, recoveries=recoveries,
+                              trace=tr if tr.enabled else None)
 
     # -- lowering -------------------------------------------------------------
     def _lower(self, df: Dataflow, with_carry: bool = False) -> Callable:
@@ -730,7 +922,8 @@ class HostExecutor:
         self.daemon = daemon
 
     def run(self, pipeline: Dataflow, file_paths: Sequence[str],
-            chaos: Optional[Any] = None) -> DataflowResult:
+            chaos: Optional[Any] = None,
+            trace: Optional[Any] = None) -> DataflowResult:
         """Execute ``pipeline`` over Sector files. ``pipeline.codec`` is
         required: it decodes the source records (record_bytes =
         ``codec.nbytes``).
@@ -740,7 +933,14 @@ class HostExecutor:
         always armed regardless: segment reads that fail because every
         listed replica is gone trigger ``SectorClient.recover`` (master
         prunes stale locations, rediscovers survivors by §2.2 scan,
-        re-replicates) and the segment is re-pooled per §3.5.2."""
+        re-replicates) and the segment is re-pooled per §3.5.2.
+
+        ``trace``: a :class:`repro.obs.trace.Tracer` — records
+        ``host.run`` → ``phase[i]`` → per-segment spans (with retry /
+        recovery sub-spans from the engine) and ``hop[i]:buckets`` spans
+        for bucket materialization. Per-phase wall time is ALWAYS
+        accounted in ``result.phase_times`` (a cheap ``time.monotonic``
+        pair), tracer or not."""
         from repro.sphere.chaos import SPMD_KINDS
         from repro.sphere.engine import SphereProcess
 
@@ -752,6 +952,7 @@ class HostExecutor:
         if pipeline.codec is None:
             raise ValueError("HostExecutor needs Dataflow.source(codec=...) "
                              "to decode Sector records")
+        tr = trace if trace is not None else NULL_TRACER
         codec = pipeline.codec
         paths = list(file_paths)
         scratch = f"{self.scratch_prefix}/run{next(_scratch_counter)}"
@@ -761,60 +962,94 @@ class HostExecutor:
         recoveries = 0
         data_errors = 0
         pending_sort: Optional[SortStage] = None
+        phase_times: List[Dict[str, Any]] = []
 
         phases = _phases(pipeline)
-        for pi, phase in enumerate(phases):
-            if chaos is not None:
-                chaos.fire_host(pi, self.master, paths, self.spes)
-            proc = SphereProcess(self.master, self.client.session_id,
-                                 self.spes, max_retries=self.max_retries)
-            holder: Dict[str, Any] = {"codec": None, "dropped": 0}
-            udf = self._phase_udf(phase, pending_sort, holder)
-            term = phase.terminator
-            nb = self._num_buckets(term)
-            if term is not None:
-                def bucket_fn(out):
-                    packed, ids = out
-                    return {b: packed[ids == b] for b in range(nb)}
-            else:
-                bucket_fn, nb = None, 0
-            # after a shuffle, a bucket file must stay one segment (one
-            # reduce group) — force whole-file segmentation
-            seg_kw = ({} if pi == 0 else
-                      {"s_min": 1 << 40, "s_max": 1 << 40})
-            res = proc.run(paths, udf, record_bytes=codec.nbytes,
-                           codec=codec, bucket_fn=bucket_fn,
-                           num_buckets=nb, recover=self.client.recover,
-                           **seg_kw)
-            retries += res.retries
-            recoveries += res.recoveries
-            data_errors += res.data_errors
-            dropped += holder["dropped"]
-            errors.update({(pi, k): v for k, v in res.errors.items()})
-            out_codec = holder["codec"] or codec
-
-            if term is None:
-                parts = [res.outputs[i] for i in sorted(res.outputs)]
-                packed = (np.concatenate(parts, axis=0) if parts
-                          else np.zeros((0, out_codec.nbytes), np.uint8))
-                records = out_codec.decode(packed)
-                return DataflowResult(
-                    records=records,
-                    valid=np.ones((_leading(records),), bool),
-                    dropped=dropped, errors=errors, retries=retries,
-                    recoveries=recoveries, data_errors=data_errors)
-
-            # materialize bucket files as the next phase's input stream
-            prefix = f"{scratch}/s{pi}"
-            self.client.upload_dataset(
-                prefix, [np.ascontiguousarray(res.outputs[b]).tobytes()
-                         for b in range(nb)])
-            paths = [f"{prefix}.{b:05d}" for b in range(nb)]
-            if self.daemon is not None:
-                # replicate fresh bucket files before anything can eat them
-                self.daemon.run_until_stable()
-            codec = out_codec
-            pending_sort = term if isinstance(term, SortStage) else None
+        with tr.span("host.run", pipeline=pipeline.describe(),
+                     files=len(paths)) as root:
+            for pi, phase in enumerate(phases):
+                t0 = time.monotonic()
+                term = phase.terminator
+                term_kind = ("output" if term is None else
+                             _STAGE_KIND[type(term)])
+                with tr.span(f"phase[{pi}]", paths=len(paths),
+                             terminator=term_kind) as psp:
+                    if chaos is not None:
+                        chaos.fire_host(pi, self.master, paths, self.spes)
+                    proc = SphereProcess(self.master, self.client.session_id,
+                                         self.spes,
+                                         max_retries=self.max_retries)
+                    holder: Dict[str, Any] = {"codec": None, "dropped": 0}
+                    udf = self._phase_udf(phase, pending_sort, holder)
+                    nb = self._num_buckets(term)
+                    if term is not None:
+                        def bucket_fn(out):
+                            packed, ids = out
+                            return {b: packed[ids == b] for b in range(nb)}
+                    else:
+                        bucket_fn, nb = None, 0
+                    # after a shuffle, a bucket file must stay one segment
+                    # (one reduce group) — force whole-file segmentation
+                    seg_kw = ({} if pi == 0 else
+                              {"s_min": 1 << 40, "s_max": 1 << 40})
+                    res = proc.run(paths, udf, record_bytes=codec.nbytes,
+                                   codec=codec, bucket_fn=bucket_fn,
+                                   num_buckets=nb,
+                                   recover=self.client.recover,
+                                   trace=trace, **seg_kw)
+                    retries += res.retries
+                    recoveries += res.recoveries
+                    data_errors += res.data_errors
+                    dropped += holder["dropped"]
+                    errors.update({(pi, k): v for k, v in res.errors.items()})
+                    out_codec = holder["codec"] or codec
+                    psp.set(segments=res.segments_processed, retries=res.retries,
+                            recoveries=res.recoveries,
+                            data_errors=res.data_errors)
+                    materialize_s = 0.0
+                    if term is not None:
+                        # materialize bucket files as the next phase's input
+                        m0 = time.monotonic()
+                        with tr.span(f"hop[{pi}]:buckets", buckets=nb):
+                            prefix = f"{scratch}/s{pi}"
+                            self.client.upload_dataset(
+                                prefix,
+                                [np.ascontiguousarray(res.outputs[b])
+                                 .tobytes() for b in range(nb)])
+                            paths = [f"{prefix}.{b:05d}" for b in range(nb)]
+                            if self.daemon is not None:
+                                # replicate fresh bucket files before
+                                # anything can eat them
+                                self.daemon.run_until_stable()
+                        materialize_s = time.monotonic() - m0
+                    elapsed = time.monotonic() - t0
+                    phase_times.append({
+                        "phase": pi, "terminator": term_kind,
+                        "seconds": elapsed, "engine_s": res.elapsed_s,
+                        "materialize_s": materialize_s,
+                        "segments": res.segments_processed,
+                        "retries": res.retries,
+                        "recoveries": res.recoveries,
+                        "data_errors": res.data_errors,
+                    })
+                    REGISTRY.histogram("host.phase_seconds").observe(elapsed)
+                    if term is None:
+                        REGISTRY.counter("host.dropped").inc(dropped)
+                        root.set(phases=len(phase_times), dropped=dropped)
+                        parts = [res.outputs[i] for i in sorted(res.outputs)]
+                        packed = (np.concatenate(parts, axis=0) if parts
+                                  else np.zeros((0, out_codec.nbytes),
+                                                np.uint8))
+                        records = out_codec.decode(packed)
+                        return DataflowResult(
+                            records=records,
+                            valid=np.ones((_leading(records),), bool),
+                            dropped=dropped, errors=errors, retries=retries,
+                            recoveries=recoveries, data_errors=data_errors,
+                            trace=trace, phase_times=phase_times)
+                    codec = out_codec
+                    pending_sort = (term if isinstance(term, SortStage)
+                                    else None)
         raise AssertionError("unreachable: final phase returns")
 
     # -- phase lowering -------------------------------------------------------

@@ -14,12 +14,15 @@ in-XLA analogue of the same pattern is :func:`repro.core.udf.sphere_map`.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.records import RecordCodec
 from repro.core.stream import SegmentInfo, SphereStream
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.sector.master import Master
 from repro.sector.topology import NodeAddress
 from repro.sphere.spe import SPE, SegmentLost
@@ -39,6 +42,13 @@ class SphereResult:
     #: permanently failed segments surfaced as DATA_ERROR in ``errors`` —
     #: a non-zero count means the output is *incomplete*, not just retried
     data_errors: int = 0
+    #: wall-clock seconds the whole stage took (one engine run = one phase
+    #: of the host dataflow) — a cheap ``time.monotonic`` pair, recorded
+    #: whether or not a tracer is attached
+    elapsed_s: float = 0.0
+    #: input segments successfully processed (NOT the bucket count —
+    #: ``outputs`` is re-keyed by bucket when a ``bucket_fn`` is active)
+    segments_processed: int = 0
 
     def concat(self) -> np.ndarray:
         parts = [self.outputs[i] for i in sorted(self.outputs)]
@@ -82,6 +92,7 @@ class SphereProcess:
         s_min: int = 1,
         s_max: int = 1 << 30,
         recover: Optional[Callable[[str], Any]] = None,
+        trace: Optional[Any] = None,
     ) -> SphereResult:
         """Execute ``udf`` over every segment; optionally route outputs to
         buckets (``bucket_fn`` maps a UDF output to {bucket_id: records}),
@@ -99,7 +110,14 @@ class SphereProcess:
         :class:`repro.sphere.spe.SegmentLost`). Normally
         ``SectorClient.recover`` — it restores the file from a surviving
         copy so the re-pooled segment succeeds; if it raises IOError the
-        data is truly gone and the segment becomes a DATA_ERROR."""
+        data is truly gone and the segment becomes a DATA_ERROR.
+
+        ``trace``: a :class:`repro.obs.trace.Tracer` — each segment
+        attempt becomes a ``segment[i]`` span (with the SPE's read/udf
+        sub-spans) annotated with its outcome; recoveries become nested
+        ``recover[i]`` spans and re-pools emit ``retry`` instant events."""
+        tr = trace if trace is not None else NULL_TRACER
+        t_start = time.monotonic()
         segments = self.segment_stream(file_paths, record_bytes,
                                        s_min=s_min, s_max=s_max)
         outputs: Dict[int, Any] = {}
@@ -134,42 +152,66 @@ class SphereProcess:
                 # locality hit must not burn an rr slot for other segments
                 spe = live[rr % len(live)]
                 rr += 1
-            try:
-                out = spe.process(seg, udf, record_bytes, codec=codec)
-            except SegmentLost as e:                  # input data lost; SPE fine
-                attempt[seg_i] += 1
-                if recover is not None:
-                    try:
-                        recover(e.path)
-                        recoveries += 1
-                    except (IOError, OSError) as gone:
-                        errors[seg_i] = f"DATA_ERROR: {gone}"
-                        continue
-                if attempt[seg_i] > self.max_retries + len(self.spes):
-                    errors[seg_i] = f"DATA_ERROR: gave up: {e}"
-                else:
+            with tr.span(f"segment[{seg_i}]", spe=spe.spe_id,
+                         records=seg.num_records,
+                         attempt=attempt[seg_i]) as ssp:
+                try:
+                    out = spe.process(seg, udf, record_bytes, codec=codec,
+                                      trace=trace)
+                except SegmentLost as e:          # input data lost; SPE fine
+                    ssp.set(outcome="segment_lost")
+                    attempt[seg_i] += 1
+                    if recover is not None:
+                        try:
+                            with tr.span(f"recover[{seg_i}]", path=e.path):
+                                recover(e.path)
+                            recoveries += 1
+                            REGISTRY.counter("host.recoveries").inc()
+                        except (IOError, OSError) as gone:
+                            errors[seg_i] = f"DATA_ERROR: {gone}"
+                            REGISTRY.counter("host.data_errors").inc()
+                            continue
+                    if attempt[seg_i] > self.max_retries + len(self.spes):
+                        errors[seg_i] = f"DATA_ERROR: gave up: {e}"
+                        REGISTRY.counter("host.data_errors").inc()
+                    else:
+                        retries += 1
+                        REGISTRY.counter("host.retries").inc()
+                        tr.event("retry", segment=seg_i,
+                                 reason="segment_lost")
+                        pending.append(seg_i)     # re-pool (paper §3.5.2)
+                    continue
+                except (IOError, OSError) as e:   # SPE/node failure
+                    ssp.set(outcome="spe_failure")
+                    live = [s for s in live if s is not spe]
+                    attempt[seg_i] += 1
                     retries += 1
-                    pending.append(seg_i)             # re-pool (paper §3.5.2)
-                continue
-            except (IOError, OSError) as e:           # SPE/node failure
-                live = [s for s in live if s is not spe]
-                attempt[seg_i] += 1
-                retries += 1
-                if attempt[seg_i] > self.max_retries + len(self.spes):
-                    errors[seg_i] = f"DATA_ERROR: gave up: {e}"
-                else:
-                    pending.append(seg_i)             # reassign (paper §3.5.2)
-                continue
-            except Exception as e:                    # data/UDF error
-                attempt[seg_i] += 1
-                if attempt[seg_i] >= self.max_retries:
-                    # report to application, *counted*: the output is missing
-                    # this segment and the caller must be able to tell
-                    errors[seg_i] = f"DATA_ERROR: {e!r}"
-                else:
-                    retries += 1
-                    pending.append(seg_i)
-                continue
+                    REGISTRY.counter("host.retries").inc()
+                    if attempt[seg_i] > self.max_retries + len(self.spes):
+                        errors[seg_i] = f"DATA_ERROR: gave up: {e}"
+                        REGISTRY.counter("host.data_errors").inc()
+                    else:
+                        tr.event("retry", segment=seg_i,
+                                 reason="spe_failure")
+                        pending.append(seg_i)     # reassign (paper §3.5.2)
+                    continue
+                except Exception as e:            # data/UDF error
+                    ssp.set(outcome="udf_error")
+                    attempt[seg_i] += 1
+                    if attempt[seg_i] >= self.max_retries:
+                        # report to application, *counted*: the output is
+                        # missing this segment, the caller must be able to
+                        # tell
+                        errors[seg_i] = f"DATA_ERROR: {e!r}"
+                        REGISTRY.counter("host.data_errors").inc()
+                    else:
+                        retries += 1
+                        REGISTRY.counter("host.retries").inc()
+                        tr.event("retry", segment=seg_i, reason="udf_error")
+                        pending.append(seg_i)
+                    continue
+                ssp.set(outcome="ok")
+                REGISTRY.counter("host.segments").inc()
             outputs[seg_i] = out
             if bucket_fn is not None:
                 # the paper: SPE dumps results locally first, then sends to
@@ -181,7 +223,9 @@ class SphereProcess:
             outputs=outputs, errors=errors, retries=retries,
             recoveries=recoveries,
             data_errors=sum(1 for v in errors.values()
-                            if v.startswith("DATA_ERROR")))
+                            if v.startswith("DATA_ERROR")),
+            elapsed_s=time.monotonic() - t_start,
+            segments_processed=len(outputs))
         if bucket_fn is not None:
             # an empty bucket must keep the records' dtype and trailing dims
             # (np.zeros((0,)) would silently decay to 1-D float64)

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.records import RecordCodec
 from repro.core.stream import SegmentInfo
+from repro.obs.trace import NULL_TRACER
 from repro.sector.master import Master
 from repro.sector.topology import NodeAddress
 
@@ -64,17 +65,24 @@ class SPE:
 
     def process(self, seg: SegmentInfo, udf: Callable[[np.ndarray], Any],
                 record_bytes: int,
-                codec: Optional[RecordCodec] = None) -> Any:
+                codec: Optional[RecordCodec] = None,
+                trace: Optional[Any] = None) -> Any:
         """Steps 1-4 for one segment.
 
         With a ``codec`` the SPE decodes the raw bytes into the structured
         record pytree before invoking the UDF — the schema travels with the
-        shipped UDF, mirroring the paper's ``.idx``-indexed record files."""
+        shipped UDF, mirroring the paper's ``.idx``-indexed record files.
+        With a ``trace`` the read (fetch + decode) and UDF phases become
+        ``spe.read`` / ``spe.udf`` sub-spans of the engine's segment span."""
+        tr = trace if trace is not None else NULL_TRACER
         if self.fail_after is not None and self.segments_done >= self.fail_after:
             raise IOError(f"SPE {self.spe_id} crashed")
-        records = self.read_segment(seg, record_bytes)
-        if codec is not None:
-            records = codec.decode(records)
-        result = udf(records)
+        with tr.span("spe.read", path=seg.file_path,
+                     records=seg.num_records):
+            records = self.read_segment(seg, record_bytes)
+            if codec is not None:
+                records = codec.decode(records)
+        with tr.span("spe.udf"):
+            result = udf(records)
         self.segments_done += 1
         return result

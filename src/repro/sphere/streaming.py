@@ -61,6 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.records import RecordCodec
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.sphere.dataflow import (Dataflow, MapStage, ReduceStage,
                                    SPMDExecutor, _last_reduce_index,
                                    _leading, _split_reduce_out)
@@ -173,6 +175,7 @@ class TenantQueue:
         st = self._tenants.get(tenant) or self.register(tenant)
         if len(st.queue) >= st.capacity:
             st.rejected += 1
+            REGISTRY.counter("tenant.rejected", tenant=tenant).inc()
             raise QueueFull(tenant, len(st.queue))
         if timeout == -1.0:
             timeout = self.timeout
@@ -184,6 +187,7 @@ class TenantQueue:
             self._deadlines.push(tk.deadline, tk)
         st.queue.append(tk)
         st.admitted += 1
+        REGISTRY.counter("tenant.admitted", tenant=tenant).inc()
         return tk
 
     # -- dispatch: strict priority + deficit round-robin ---------------------
@@ -262,6 +266,9 @@ class TenantQueue:
         st.delivered += 1
         st.records_served += ticket.cost
         st.latencies.append(now - ticket.admitted_at)
+        REGISTRY.counter("tenant.delivered", tenant=ticket.tenant).inc()
+        REGISTRY.histogram("tenant.latency", tenant=ticket.tenant).observe(
+            now - ticket.admitted_at)
         return True
 
     def requeue(self, ticket: Ticket, now: Optional[float] = None) -> bool:
@@ -283,9 +290,11 @@ class TenantQueue:
                 pass
         ticket.requeues += 1
         st.requeues += 1
+        REGISTRY.counter("tenant.requeues", tenant=ticket.tenant).inc()
         if ticket.requeues > self.max_requeues:
             ticket.status = SegStatus.DATA_ERROR
             st.failed += 1
+            REGISTRY.counter("tenant.failed", tenant=ticket.tenant).inc()
             return False
         ticket.status = SegStatus.PENDING
         if ticket.timeout is not None:
@@ -306,6 +315,7 @@ class TenantQueue:
             if tk.status != SegStatus.PENDING or tk.deadline != deadline:
                 continue                # stale entry (refreshed or moved on)
             self._tenants[tk.tenant].timeouts += 1
+            REGISTRY.counter("tenant.timeouts", tenant=tk.tenant).inc()
             if self.requeue(tk, now=now):
                 requeued.append(tk)
         return requeued
@@ -376,7 +386,8 @@ class StreamExecutor:
     def __init__(self, inner: SPMDExecutor, pipeline: Dataflow,
                  micro_batch: int, carry_capacity: int = 0,
                  queue: Optional[TenantQueue] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 trace: Optional[Any] = None):
         if not pipeline.stream:
             raise ValueError(
                 "StreamExecutor needs a Dataflow.stream_source() pipeline "
@@ -391,6 +402,7 @@ class StreamExecutor:
         self.micro_batch = micro_batch
         self.carry_capacity = carry_capacity
         self.queue = queue if queue is not None else TenantQueue()
+        self.trace = trace if trace is not None else NULL_TRACER
         self._clock = clock or time.monotonic
         self._carry: Optional[Tuple[Any, Any]] = None
         self._codec: Optional[RecordCodec] = None
@@ -434,9 +446,12 @@ class StreamExecutor:
         tickets = self.queue.acquire(self.micro_batch, now=now)
         if not tickets:
             return None
+        tr = self.trace
         if self._fail_next_batch:       # simulated batch loss (tests/soak)
             self._fail_next_batch = False
             self._batch_failures += 1
+            tr.event("batch_lost", step=self._steps,
+                     tickets=len(tickets))
             requeued = [t for t in tickets if self.queue.requeue(t, now=now)]
             return StreamBatch(step=self._steps, records=None,
                                valid=np.zeros((0,), bool), dropped=0,
@@ -444,16 +459,27 @@ class StreamExecutor:
         batch, valid, n = self._assemble(tickets)
         if self.carry_capacity and self._carry is None:
             self._carry = self._init_carry(batch, valid)
-        t0 = time.monotonic()
-        with self.inner.mesh:
-            res = self.inner.run(self.pipeline, batch, valid=valid,
-                                 carry=self._carry)
-        dropped = int(res.dropped)
-        self._run_seconds += time.monotonic() - t0
-        if self.carry_capacity:
-            self._carry = res.carry
+        with tr.span(f"stream.batch[{self._steps}]", records=n,
+                     tenants=sorted({t.tenant for t in tickets}),
+                     admission_wait_max=max(now - t.admitted_at
+                                            for t in tickets)) as bsp:
+            t0 = time.monotonic()
+            with self.inner.mesh:
+                res = self.inner.run(self.pipeline, batch, valid=valid,
+                                     carry=self._carry,
+                                     trace=tr if tr.enabled else None)
+            dropped = int(res.dropped)
+            self._run_seconds += time.monotonic() - t0
+            if self.carry_capacity:
+                self._carry = res.carry
+            if tr.enabled:
+                carry_rows = (int(np.asarray(self._carry[1]).sum())
+                              if self._carry is not None else 0)
+                bsp.set(dropped=dropped, carry_rows=carry_rows)
         self._steps += 1
         self._records_in += n
+        REGISTRY.counter("stream.batches").inc()
+        REGISTRY.counter("stream.records").inc(n)
         delivered = [t for t in tickets if self.queue.complete(t, now=now)]
         return StreamBatch(step=self._steps, records=res.records,
                            valid=res.valid, dropped=dropped,
