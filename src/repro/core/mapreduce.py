@@ -94,14 +94,17 @@ def map_reduce(
 
 def reduce_by_key_sum(keys: jax.Array, values: jax.Array, valid: jax.Array,
                       max_unique: Optional[int] = None,
-                      use_pallas: bool = False):
+                      use_pallas=kops._UNSET,
+                      algo: Optional[str] = None):
     """Built-in Reduce UDF: sum values per key (wordcount/inverted-index
     aggregation). Groups by key — a single-segment run of the same
     sort machinery the stage-2 segmented sort uses
-    (:func:`repro.kernels.ops.sort_kv_segments`: the Pallas bitonic kernel
-    when ``use_pallas``, else the stable-argsort oracle) — then
-    segment-sums runs of equal keys. Summation is order-insensitive, so the
-    bitonic network's instability within a run does not change results.
+    (:func:`repro.kernels.ops.sort_kv_segments`, dispatched through the
+    backend-aware autotuner; ``algo`` pins ``"bitonic"``/``"radix"``/
+    ``"oracle"``) — then segment-sums runs of equal keys. Summation is
+    order-insensitive, so even the unstable bitonic network's tie order
+    does not change results. ``use_pallas`` is deprecated (``True`` →
+    ``algo="bitonic"``, ``False`` → ``algo="oracle"``).
 
     Returns (unique_keys, sums, dropped) with key=-1 padding rows up to the
     input size (or ``max_unique``). ``dropped`` counts the distinct keys that
@@ -109,13 +112,14 @@ def reduce_by_key_sum(keys: jax.Array, values: jax.Array, valid: jax.Array,
     reported the same way ``sphere_shuffle.dropped`` reports capacity
     overflow, and :func:`map_reduce` folds it into its ``dropped`` total.
     Values keep their dtype (sums of float64 values are float64)."""
+    algo = kops._legacy_algo(use_pallas, algo, "reduce_by_key_sum")
     n = keys.shape[0]
     cap = max_unique or n
-    sentinel = jnp.iinfo(jnp.int32).max
+    sentinel = int(kops.pad_sentinel(jnp.int32))
     skey = jnp.where(valid, keys, sentinel)
     pos = jnp.arange(n, dtype=jnp.int32)
     sk_row, order_row = kops.sort_kv_segments(skey[None, :], pos[None, :],
-                                              use_pallas=use_pallas)
+                                              algo=algo)
     sk, order = sk_row[0], order_row[0]
     sv = jnp.take(jnp.where(valid, values, jnp.zeros_like(values)), order)
     is_head = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])

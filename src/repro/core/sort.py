@@ -99,6 +99,7 @@ def terasort(
     buckets_per_device: int = 1,
     plan: Optional[ShufflePlan] = None,
     chunks: Optional[int] = None,
+    sort_algo: Optional[str] = None,
 ) -> SortResult:
     """Globally sort (keys, payload) sharded over ``axis``.
 
@@ -110,10 +111,14 @@ def terasort(
     shuffle of :mod:`repro.core.shuffle`, keeping cross-DC traffic to one
     dense tile per remote data center. An explicit ``plan`` overrides
     ``axis``/``buckets_per_device``/``capacity_factor``: its axes and bucket
-    count drive the sharding specs and splitters. ``use_pallas`` governs the
-    stage-2 sort kernel independently of ``plan.use_pallas`` (which governs
-    the shuffle histogram) — the kernel-vs-oracle parity benchmark relies on
-    switching them separately. ``chunks`` sets the shuffle pipeline depth:
+    count drive the sharding specs and splitters. ``sort_algo`` pins the
+    stage-2 segment-sort kernel (``"bitonic"``/``"radix"``/``"oracle"``);
+    ``None`` defers to the legacy ``use_pallas`` switch (``True`` → the
+    bitonic kernel, ``False`` → the backend-aware autotuner of
+    :mod:`repro.kernels.autotune`), independently of ``plan.use_pallas``
+    (which governs the shuffle histogram) — the kernel-vs-oracle parity
+    benchmark relies on switching them separately. ``chunks`` sets the
+    shuffle pipeline depth:
     W interleaved pack/exchange rounds per hop (see
     :func:`repro.core.shuffle.sphere_shuffle`); ``None`` defers to
     ``plan.chunks`` (or 1).
@@ -141,7 +146,7 @@ def terasort(
                                 num_buckets=num_buckets,
                                 capacity_factor=capacity_factor)
     ex = SPMDExecutor(mesh, axes=axes, plan=plan, use_pallas=use_pallas,
-                      chunks=chunks)
+                      chunks=chunks, sort_algo=sort_algo)
     res = ex.run(df, {"key": keys.astype(jnp.int32),
                       "payload": payload})
     return SortResult(keys=res.records["key"], payload=res.records["payload"],
@@ -154,13 +159,19 @@ def hadoop_style_sort(
     mesh: Mesh,
     axis: str = "data",
     splitters: Optional[jnp.ndarray] = None,
-    use_pallas: bool = False,
+    use_pallas=kops._UNSET,
+    algo: Optional[str] = None,
 ) -> SortResult:
     """Baseline: every reducer pulls the complete map output (block-store
     shuffle read amplification), then filters its own key range and sorts.
     Semantically identical to :func:`terasort`; moves D× the bytes.
-    ``use_pallas`` selects the Pallas bitonic kernel for the local sort
-    (matching terasort's stage-2 switch), else the XLA stable sort."""
+
+    The local sort goes through the autotuned
+    :func:`repro.kernels.ops.sort_kv_segments` entry point; ``algo`` pins
+    ``"bitonic"``/``"radix"``/``"oracle"``, ``None`` autotunes.
+    ``use_pallas`` is deprecated (``True`` → ``algo="bitonic"``, ``False``
+    → ``algo="oracle"``)."""
+    algo = kops._legacy_algo(use_pallas, algo, "hadoop_style_sort")
     axis_size = mesh.shape[axis]
     if splitters is None:
         splitters = uniform_splitters(axis_size)
@@ -178,14 +189,10 @@ def hadoop_style_sort(
         # realistic capacity: same as terasort's receive capacity.
         cap = k.shape[0] * 2
         skey = jnp.where(mine, all_k, KEY_MAX)
-        if use_pallas:
-            pos = jnp.arange(skey.shape[0], dtype=jnp.int32)
-            sk_row, order_row = kops.sort_kv_segments(skey[None, :],
-                                                      pos[None, :])
-            order, sk = order_row[0, :cap], sk_row[0, :cap]
-        else:
-            order = jnp.argsort(skey, stable=True)[:cap]
-            sk = jnp.take(skey, order)
+        pos = jnp.arange(skey.shape[0], dtype=jnp.int32)
+        sk_row, order_row = kops.sort_kv_segments(skey[None, :],
+                                                  pos[None, :], algo=algo)
+        order, sk = order_row[0, :cap], sk_row[0, :cap]
         sp = jnp.take(all_p, order)
         sv = jnp.take(mine, order)
         return sk, sp, sv, jnp.zeros((), jnp.int32)

@@ -13,20 +13,31 @@ TPU there is no efficient per-element scatter, so we adapt:
 - ``bitonic_sort``  — in-VMEM bitonic network over (key, payload) pairs using
                       XOR-partner compare-exchange realized as reshapes/flips
                       (no gather/scatter), the TPU-native sort; one grid step
-                      sorts a sublane-packed block of segments.
+                      sorts a sublane-packed block of segments. Not stable.
+- ``radix_sort``    — stable LSD counting-radix sort: per-byte one-hot
+                      cumsum rank (the ``partition`` primitive, one pass per
+                      key digit) with the permutation applied as chunked
+                      one-hot MXU matmuls — no gather/scatter at all.
+- ``autotune``      — backend-aware dispatch: measures bitonic vs radix vs
+                      the XLA oracle once per segment-geometry cell, caches
+                      the winner, persists the table into BENCH_kernels.json.
 
 ``ops`` exposes jit'd wrappers (including ``partition_pack``, the full
-rank → slot-map → gather send-tile builder); ``ref`` holds the pure-jnp
-oracles used by the tests' allclose sweeps.
+rank → slot-map → gather send-tile builder); the sort entry points dispatch
+through the autotuner. ``ref`` holds the pure-jnp oracles used by the
+tests' allclose sweeps.
 """
 
 from repro.kernels.ops import (
     bucket_histogram,
+    pad_sentinel,
     partition_pack,
     partition_rank,
+    resolve_sort_algo,
     sort_segments,
     sort_kv_segments,
 )
 
-__all__ = ["bucket_histogram", "partition_pack", "partition_rank",
-           "sort_segments", "sort_kv_segments"]
+__all__ = ["bucket_histogram", "pad_sentinel", "partition_pack",
+           "partition_rank", "resolve_sort_algo", "sort_segments",
+           "sort_kv_segments"]

@@ -2,30 +2,80 @@
 
 On the CPU container the kernels execute in Pallas ``interpret`` mode (the
 kernel body runs as traced JAX ops); on a real TPU set
-``REPRO_PALLAS_INTERPRET=0`` to run the compiled kernels. ``use_pallas=False``
-falls back to the jnp oracles in :mod:`repro.kernels.ref` — the terasort
-benchmark uses that switch to measure kernel-vs-oracle parity.
+``REPRO_PALLAS_INTERPRET=0`` to run the compiled kernels.
+
+The segment-sort entry points (:func:`sort_segments`,
+:func:`sort_kv_segments`) dispatch through the backend-aware autotuner
+(:mod:`repro.kernels.autotune`): ``algo=None`` measures bitonic vs radix vs
+the XLA oracle once per shape cell and replays the cached winner; ``algo``
+may pin ``"bitonic"`` / ``"radix"`` / ``"oracle"`` explicitly, and
+``REPRO_KERNEL_FORCE`` overrides everything. The historical ``use_pallas``
+boolean is deprecated (it predates the radix kernel): ``True`` maps to
+``"bitonic"``, ``False`` to ``"oracle"``.
 """
 
 from __future__ import annotations
 
 import os
-from typing import List, Sequence, Tuple
+import warnings
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.bucket_hist import bucket_histogram_pallas
-from repro.kernels.bitonic_sort import sort_kv_segments_pallas, sort_segments_pallas
+from repro.kernels.bitonic_sort import (sort_kv_segments_pallas,
+                                        sort_segments_pallas)
 from repro.kernels.partition import partition_rank_pallas
+from repro.kernels.radix_sort import (sort_kv_segments_radix,
+                                      sort_segments_radix)
+
+_UNSET = object()  # sentinel: "use_pallas not passed" (deprecation shim)
+
+_interpret_default = autotune.interpret_default
 
 
-def _interpret_default() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() == "cpu"
+def pad_sentinel(dtype):
+    """Greatest value of ``dtype`` — the padding key that sorts to the end
+    of a segment (+inf for floats, the integer max otherwise), as a numpy
+    scalar so it stays concrete inside traced code. Stable sorts keep real
+    keys equal to the sentinel ahead of suffix padding; only the unstable
+    bitonic network needs the collision guard."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return dtype.type(float("inf"))
+    return dtype.type(jnp.iinfo(dtype).max)
+
+
+def _legacy_algo(use_pallas, algo: Optional[str], where: str) -> Optional[str]:
+    """Fold the deprecated ``use_pallas`` boolean into ``algo``."""
+    if use_pallas is _UNSET:
+        return algo
+    warnings.warn(
+        f"{where}(use_pallas=...) is deprecated: the kernel choice is now "
+        f"autotuned per shape/backend; pass algo='bitonic'/'radix'/'oracle' "
+        f"to pin one (use_pallas={bool(use_pallas)} maps to "
+        f"algo={'bitonic' if use_pallas else 'oracle'!r}).",
+        DeprecationWarning, stacklevel=3)
+    if algo is not None:
+        return algo
+    return "bitonic" if use_pallas else "oracle"
+
+
+def resolve_sort_algo(num_segments: int, segment_len: int, dtype,
+                      algo: Optional[str] = None, kv: bool = True) -> str:
+    """The algorithm :func:`sort_segments` / :func:`sort_kv_segments` will
+    run for this cell: the forced/pinned/autotuned choice as a plain string,
+    resolvable at trace time (callers use it to decide stability-dependent
+    guards before the sort runs). ``REPRO_KERNEL_FORCE`` beats a pinned
+    ``algo``."""
+    if not os.environ.get(autotune.FORCE_ENV) and algo is not None:
+        if algo not in autotune.ALGOS:
+            raise ValueError(f"algo={algo!r}: expected one of "
+                             f"{autotune.ALGOS} (or None to autotune)")
+        return algo
+    return autotune.choose(num_segments, segment_len, dtype, kv=kv).algo
 
 
 def bucket_histogram(bucket_ids: jnp.ndarray, num_buckets: int,
@@ -104,16 +154,40 @@ def partition_pack(
     return tiles, in_range, origin, dropped_local
 
 
-def sort_segments(keys: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
-    """Sort each row ascending."""
-    if not use_pallas:
+def sort_segments(keys: jnp.ndarray, use_pallas=_UNSET, *,
+                  algo: Optional[str] = None) -> jnp.ndarray:
+    """Sort each row ascending.
+
+    ``algo=None`` → autotuned per shape/backend (see module docstring);
+    ``"bitonic"``/``"radix"``/``"oracle"`` pin an implementation.
+    ``use_pallas`` is the deprecated boolean predecessor.
+    """
+    algo = _legacy_algo(use_pallas, algo, "sort_segments")
+    n, s = keys.shape
+    resolved = resolve_sort_algo(n, s, keys.dtype, algo, kv=False)
+    if resolved == "oracle":
         return ref.sort_segments_ref(keys)
+    if resolved == "radix":
+        return sort_segments_radix(keys, interpret=_interpret_default())
     return sort_segments_pallas(keys, interpret=_interpret_default())
 
 
 def sort_kv_segments(keys: jnp.ndarray, values: jnp.ndarray,
-                     use_pallas: bool = True):
-    """Sort each row of (keys, values) by key."""
-    if not use_pallas:
+                     use_pallas=_UNSET, *, algo: Optional[str] = None):
+    """Sort each row of (keys, values) by key.
+
+    ``algo=None`` → autotuned per shape/backend; ``"radix"`` and
+    ``"oracle"`` are stable, ``"bitonic"`` is not (callers needing
+    stability check :func:`repro.kernels.autotune.is_stable` on the
+    :func:`resolve_sort_algo` result). ``use_pallas`` is deprecated.
+    """
+    algo = _legacy_algo(use_pallas, algo, "sort_kv_segments")
+    n, s = keys.shape
+    resolved = resolve_sort_algo(n, s, keys.dtype, algo, kv=True)
+    if resolved == "oracle":
         return ref.sort_kv_segments_ref(keys, values)
-    return sort_kv_segments_pallas(keys, values, interpret=_interpret_default())
+    if resolved == "radix":
+        return sort_kv_segments_radix(keys, values,
+                                      interpret=_interpret_default())
+    return sort_kv_segments_pallas(keys, values,
+                                   interpret=_interpret_default())

@@ -57,6 +57,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import os
 import time
 from collections import OrderedDict, namedtuple
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
@@ -71,6 +72,7 @@ from repro.compat import shard_map
 from repro.core.introspect import collective_counts
 from repro.core.records import RecordCodec
 from repro.core.shuffle import ShufflePlan, record_hops
+from repro.kernels import autotune
 from repro.kernels import ops as kops
 from repro.obs.metrics import REGISTRY
 from repro.obs.trace import NULL_TRACER
@@ -324,11 +326,22 @@ class SPMDExecutor:
     same pipeline object on same-shaped data costs zero retracing while
     long-lived executors cannot accumulate compiled programs without bound.
 
+    ``sort_algo`` pins the stage-2 segment-sort kernel (``"bitonic"`` /
+    ``"radix"`` / ``"oracle"``); ``None`` defers to the backend-aware
+    autotuner (:mod:`repro.kernels.autotune`) — measured once per segment
+    geometry, replayed from cache afterwards — except that the legacy
+    ``use_pallas=True`` keeps its historical meaning and pins
+    ``"bitonic"``. ``REPRO_KERNEL_FORCE`` overrides everything (and is part
+    of the compile-cache key, so flipping it between runs retraces).
+
     ``debug_checks`` (on by default) validates, after each run of a
     pipeline containing a sort, that no real record key collided with the
-    reserved ``INT32_MAX`` padding sentinel — such keys would silently be
-    treated as padding by the segmented stage-2 sort. The check costs one
-    scalar device sync per run; pass ``debug_checks=False`` to skip it.
+    stage-2 padding sentinel (the key dtype's maximum) **while an unstable
+    sort kernel is selected** — the bitonic network could silently swap
+    such keys with padding slots. Stable kernels (radix, oracle) keep real
+    keys ahead of the suffix padding, so max-value keys are delivered
+    correctly and the check never fires. The check costs one scalar device
+    sync per run; pass ``debug_checks=False`` to skip it.
     """
 
     def __init__(self, mesh: Mesh, axes: Sequence[str] = ("data",),
@@ -336,12 +349,15 @@ class SPMDExecutor:
                  use_pallas: bool = False,
                  chunks: Optional[int] = None,
                  cache_size: int = 32,
-                 debug_checks: bool = True):
+                 debug_checks: bool = True,
+                 sort_algo: Optional[str] = None):
         self.mesh = mesh
         self.plan = plan
         self.axes = tuple(plan.axes) if plan is not None else tuple(
             (axes,) if isinstance(axes, str) else axes)
         self.use_pallas = use_pallas
+        self.sort_algo = (sort_algo if sort_algo is not None
+                          else ("bitonic" if use_pallas else None))
         self.chunks = chunks
         self.cache_size = cache_size
         self.debug_checks = debug_checks
@@ -445,6 +461,7 @@ class SPMDExecutor:
             ckey = None
         leaves = jax.tree.leaves(records)
         key = (id(pipeline), self.plan, self.chunks,
+               self.sort_algo, os.environ.get(autotune.FORCE_ENV),
                jax.tree.structure(records),
                tuple((tuple(l.shape), str(l.dtype),
                       str(getattr(l, "sharding", None))) for l in leaves),
@@ -478,12 +495,15 @@ class SPMDExecutor:
                 out_carry = None
             if self.debug_checks and entry.has_sort and int(sentinel_hits) > 0:
                 raise ValueError(
-                    f"{int(sentinel_hits)} record key(s) equal INT32_MAX, "
-                    f"which is reserved as the stage-2 sort padding sentinel "
-                    f"— they would be silently treated as padding. Rescale "
-                    f"the sort keys below 2**31-1 (or pass "
+                    f"{int(sentinel_hits)} record key(s) equal the key "
+                    f"dtype's maximum — the stage-2 sort padding sentinel — "
+                    f"while the unstable 'bitonic' kernel is selected: the "
+                    f"network's tie order is unspecified, so they could "
+                    f"silently swap with padding slots. Use a stable sort "
+                    f"(sort_algo='radix' or 'oracle' — both deliver "
+                    f"max-value keys correctly), rescale the keys, or pass "
                     f"debug_checks=False to accept the old silent "
-                    f"behaviour).")
+                    f"behaviour.")
             self._record_run(entry, n, dropped, tr, root)
         return DataflowResult(records=out_records, valid=out_valid,
                               dropped=dropped, carry=out_carry, trace=trace)
@@ -592,7 +612,8 @@ class SPMDExecutor:
             sub = SPMDExecutor(mesh, axes=self.axes, plan=None,
                                use_pallas=self.use_pallas, chunks=self.chunks,
                                cache_size=self.cache_size,
-                               debug_checks=self.debug_checks)
+                               debug_checks=self.debug_checks,
+                               sort_algo=self.sort_algo)
             self._sub_execs[mesh] = sub
         return sub
 
@@ -798,9 +819,11 @@ class SPMDExecutor:
 
         Stage 2 regroups the received records bucket-major with the same
         fused O(n) partition/pack the send path uses, then sorts the
-        ``buckets_per_device`` segments independently (the Pallas
-        multi-segment bitonic kernel when ``use_pallas``, else the row-sort
-        oracle). Because each device's buckets are consecutive key ranges,
+        ``buckets_per_device`` segments independently through the autotuned
+        :func:`repro.kernels.ops.sort_kv_segments` entry point (``sort_algo``
+        pins bitonic/radix/oracle; ``None`` lets the autotuner measure the
+        segment geometry once and replay the cached winner). Because each
+        device's buckets are consecutive key ranges,
         concatenating its sorted segments is already globally sorted —
         cutting the sorting-network work from O(R log² R) to
         O(R log² (R/bpd)). With one bucket per device the segment is the
@@ -811,11 +834,14 @@ class SPMDExecutor:
         impossible when ``buckets_per_device == 1``).
 
         Returns ``(records, valid, dropped, sentinel_hits)`` —
-        ``sentinel_hits`` counts real received keys equal to the reserved
-        ``_KEY_MAX`` padding sentinel (checked host-side by :meth:`run`
-        when ``debug_checks``: such keys are indistinguishable from padding
-        below, and the bitonic network's tie order is unspecified, so they
-        could silently swap places with padding slots).
+        ``sentinel_hits`` counts real received keys equal to the padding
+        sentinel (the key dtype's maximum, via
+        :func:`repro.kernels.ops.pad_sentinel`), checked host-side by
+        :meth:`run` when ``debug_checks``. The count is only taken when the
+        resolved kernel is the *unstable* bitonic network — padding sits in
+        each segment's suffix, so any stable sort (radix, oracle) keeps
+        real max-value keys ahead of it and delivers them correctly; for
+        those the hit count is a constant 0 and the guard can never fire.
         """
         nb = (self.plan.num_buckets if self.plan is not None
               else stage.num_buckets or self.axis_size)
@@ -832,14 +858,22 @@ class SPMDExecutor:
 
         # stage 2: bucket-major regroup (O(n) partition, stable) ...
         keys = jnp.asarray(stage.key(records)).astype(jnp.int32).reshape(-1)
-        skey = jnp.where(valid, keys, _KEY_MAX)  # requires real keys < KEY_MAX
-        sentinel_hits = jax.lax.psum(
-            jnp.sum((valid & (keys == _KEY_MAX)).astype(jnp.int32)),
-            plan.pmean_axes())
+        sentinel = kops.pad_sentinel(keys.dtype)
+        skey = jnp.where(valid, keys, sentinel)
         r = skey.shape[0]
         bpd = plan.buckets_per_device
         seg_cap = (r if bpd == 1 else
                    min(r, int(r / bpd * stage.capacity_factor) + 1))
+        # resolve the stage-2 kernel now (trace-time): stability decides
+        # whether sentinel-collision accounting is needed at all.
+        algo = kops.resolve_sort_algo(bpd, seg_cap, skey.dtype,
+                                      self.sort_algo, kv=True)
+        if autotune.is_stable(algo):
+            sentinel_hits = jnp.zeros((), jnp.int32)
+        else:
+            sentinel_hits = jax.lax.psum(
+                jnp.sum((valid & (keys == sentinel)).astype(jnp.int32)),
+                plan.pmean_axes())
         local = (jnp.searchsorted(spl, skey, side="right").astype(jnp.int32)
                  - plan.device_index() * bpd)
         seg_dest = jnp.where(valid, local, bpd)       # invalid -> overflow
@@ -850,12 +884,12 @@ class SPMDExecutor:
         dropped += jax.lax.psum(seg_drop, plan.pmean_axes())
 
         # ... then one multi-segment sort: bpd rows of seg_cap. Empty slots
-        # carry the KEY_MAX sentinel so each segment's valid records end up
-        # in its prefix — exactly where ``in_rng`` already points.
-        seg_keys = jnp.where(in_rng, tiles[0], _KEY_MAX)
+        # carry the max-key sentinel so each segment's valid records end up
+        # in its prefix — exactly where ``in_rng`` already points (pads sit
+        # in the suffix, which stable kernels preserve even on key ties).
+        seg_keys = jnp.where(in_rng, tiles[0], sentinel)
         pos = jnp.arange(bpd * seg_cap, dtype=jnp.int32).reshape(bpd, seg_cap)
-        _, order = kops.sort_kv_segments(seg_keys, pos,
-                                         use_pallas=self.use_pallas)
+        _, order = kops.sort_kv_segments(seg_keys, pos, algo=algo)
         order = order.reshape(-1)
         records = jax.tree.unflatten(treedef, [
             jnp.take(t.reshape((bpd * seg_cap,) + t.shape[2:]), order, axis=0)

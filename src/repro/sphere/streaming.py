@@ -381,6 +381,12 @@ class StreamExecutor:
     pipelines whose last reduce is schema-preserving; 0 disables carry
     (each batch is independent, the output stream is the union of batch
     outputs).
+
+    Sorted stages run through ``inner``'s stage-2 segment-sort path and so
+    inherit its ``sort_algo`` / autotuner choice (the choice is resolved at
+    first-trace time and cached, so the steady-state zero-recompile
+    guarantee is unaffected; ``REPRO_KERNEL_FORCE`` is part of the inner
+    compile-cache key).
     """
 
     def __init__(self, inner: SPMDExecutor, pipeline: Dataflow,

@@ -476,9 +476,12 @@ print("lru eviction ok")
 
 
 def test_sort_key_max_sentinel_guard():
-    """Satellite: a real key equal to INT32_MAX would silently be treated
-    as stage-2 padding; with debug_checks (the default) the executor
-    raises, and debug_checks=False restores the old silent behaviour."""
+    """Satellite: a real key equal to the key dtype's maximum collides with
+    the stage-2 padding sentinel. Under the unstable bitonic kernel the
+    executor's debug guard raises; under any *stable* sort (the default
+    autotuned path resolves to one here, and sort_algo='radix'/'oracle'
+    pin one) padding stays behind real keys, so the record is delivered
+    correctly and the guard never fires — the regression this test pins."""
     run_spmd("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.sphere.dataflow import Dataflow, SPMDExecutor
@@ -486,31 +489,45 @@ from repro.sphere.dataflow import Dataflow, SPMDExecutor
 mesh = jax.make_mesh((8,), ("data",))
 N = 8 * 64
 rng = np.random.default_rng(5)
-keys = rng.integers(0, 1 << 20, size=N).astype(np.int32)
+keys = rng.integers(0, np.iinfo(np.int32).max, size=N).astype(np.int32)
 keys[7] = np.iinfo(np.int32).max          # collides with the sort sentinel
 payload = np.arange(N, dtype=np.int32)
 df = Dataflow.source().sort(key=lambda r: r["key"], num_buckets=8)
 src = {"key": jnp.asarray(keys), "payload": jnp.asarray(payload)}
 
-ex = SPMDExecutor(mesh)
+# unstable bitonic: the guard must still catch the collision
+strict = SPMDExecutor(mesh, sort_algo="bitonic")
 try:
     with mesh:
-        ex.run(df, src)
+        strict.run(df, src)
     raise AssertionError("sentinel collision was not detected")
 except ValueError as e:
-    assert "INT32_MAX" in str(e), e
+    assert "bitonic" in str(e) and "sentinel" in str(e), e
 print("guard raised ok")
 
 # clean keys pass the guard (no false positive)
 keys2 = keys.copy(); keys2[7] = 0
 with mesh:
-    res = ex.run(df, {"key": jnp.asarray(keys2),
-                      "payload": jnp.asarray(payload)})
+    strict.run(df, {"key": jnp.asarray(keys2),
+                    "payload": jnp.asarray(payload)})
 
-# opting out restores the old silent behaviour
-loose = SPMDExecutor(mesh, debug_checks=False)
+# stable sorts deliver the max-value key instead of raising: the record
+# is present in the output with its payload, in its sorted position
+for algo in (None, "radix", "oracle"):     # None -> autotuned (stable here)
+    ex = SPMDExecutor(mesh, sort_algo=algo)
+    with mesh:
+        res = ex.run(df, src)
+    out_k = np.asarray(res.records["key"])[np.asarray(res.valid)]
+    out_p = np.asarray(res.records["payload"])[np.asarray(res.valid)]
+    assert out_k.size == N and int(res.dropped) == 0, algo
+    assert out_k[-1] == np.iinfo(np.int32).max, (algo, out_k[-8:])
+    assert out_p[out_k == np.iinfo(np.int32).max][0] == 7, algo
+print("stable delivery ok")
+
+# opting out restores the old silent behaviour for bitonic too
+loose = SPMDExecutor(mesh, sort_algo="bitonic", debug_checks=False)
 with mesh:
-    res = loose.run(df, src)    # no raise
+    loose.run(df, src)    # no raise
 print("sentinel guard ok")
 """)
 

@@ -1,0 +1,295 @@
+"""Property suite for the stable radix-sort kernel and the kernel autotuner.
+
+The radix kernel's contract is *exact* equality with the stable oracle
+(``ref.sort_kv_segments_ref`` — stable argsort + gather): same keys AND same
+payload permutation, including within runs of duplicate keys. The bitonic
+kernel is only held to key equality (it is not stable). The autotuner's
+contract is measure-once-replay-forever plus the ``REPRO_KERNEL_FORCE``
+override winning over everything.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops, ref
+from repro.kernels.radix_sort import (default_bits, key_to_sortable_bits,
+                                      radix_supported, sort_kv_segments_radix,
+                                      sort_segments_radix,
+                                      sortable_bits_to_key)
+
+from test_spmd import run_spmd
+
+
+@pytest.fixture(autouse=True)
+def _fresh_autotuner():
+    """Each test sees an empty autotune cache and no force env."""
+    autotune.reset()
+    saved = os.environ.pop(autotune.FORCE_ENV, None)
+    yield
+    autotune.reset()
+    if saved is not None:
+        os.environ[autotune.FORCE_ENV] = saved
+
+
+def _keys(rng, shape, dtype):
+    if dtype == np.float32:
+        k = rng.standard_normal(shape).astype(np.float32)
+        k[k == 0.0] = 1.0     # avoid -0.0/+0.0 ties (bit order refines them)
+        return k
+    if dtype == np.uint32:
+        return rng.integers(0, 1 << 32, size=shape,
+                            dtype=np.uint64).astype(np.uint32)
+    return rng.integers(-2**31, 2**31 - 1, size=shape,
+                        dtype=np.int64).astype(np.int32)
+
+
+def _assert_matches_oracle(k, v):
+    want_k, want_v = ref.sort_kv_segments_ref(k, v)
+    got_k, got_v = sort_kv_segments_radix(k, v)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+# -- kernel vs oracle --------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.float32])
+def test_radix_matches_stable_oracle(dtype):
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(_keys(rng, (7, 320), dtype))
+    v = jnp.arange(7 * 320, dtype=jnp.int32).reshape(7, 320)
+    _assert_matches_oracle(k, v)
+    np.testing.assert_array_equal(np.asarray(sort_segments_radix(k)),
+                                  np.asarray(ref.sort_segments_ref(k)))
+
+
+def test_radix_duplicate_keys_are_stable():
+    """Payloads of equal keys keep arrival order — exactly the stable
+    argsort permutation, for every digit width."""
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.integers(0, 6, size=(4, 256)).astype(np.int32))
+    v = jnp.arange(4 * 256, dtype=jnp.int32).reshape(4, 256)
+    want_k, want_v = ref.sort_kv_segments_ref(k, v)
+    for bits in (1, 2, 4, 8):
+        got_k, got_v = sort_kv_segments_radix(k, v, bits=bits)
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_radix_max_key_survives_padding():
+    """Keys equal to the dtype max (= the padding value) stay real: padding
+    is appended *after* them and the sort is stable, so they come back in
+    their slots — the collision the unstable bitonic kernel can't rule out."""
+    big = np.iinfo(np.int32).max
+    k = jnp.asarray([[big, 3, big, 7, big]], dtype=jnp.int32)
+    v = jnp.asarray([[0, 1, 2, 3, 4]], dtype=jnp.int32)
+    got_k, got_v = sort_kv_segments_radix(k, v)
+    assert got_k.tolist() == [[3, 7, big, big, big]]
+    assert got_v.tolist() == [[1, 3, 0, 2, 4]]     # stable among the maxes
+
+
+@pytest.mark.parametrize("rows", [1, 3, 17])
+@pytest.mark.parametrize("seglen", [1, 2, 127, 128, 129, 255])
+def test_radix_tile_boundary_shapes(rows, seglen):
+    """Lane padding (to 128) and row blocking must be invisible."""
+    rng = np.random.default_rng(rows * 1000 + seglen)
+    k = jnp.asarray(_keys(rng, (rows, seglen), np.int32))
+    v = jnp.arange(rows * seglen, dtype=jnp.int32).reshape(rows, seglen)
+    _assert_matches_oracle(k, v)
+
+
+@pytest.mark.parametrize("bpd", [1, 4, 16, 64])
+def test_radix_bpd_sweep(bpd):
+    """The stage-2 geometry: bpd segment rows per device."""
+    rng = np.random.default_rng(bpd)
+    k = jnp.asarray(_keys(rng, (bpd, 256), np.int32))
+    v = jnp.arange(bpd * 256, dtype=jnp.int32).reshape(bpd, 256)
+    _assert_matches_oracle(k, v)
+
+
+def test_radix_empty_and_full_segments():
+    """All-padding rows (empty segments) and rows that are entirely one
+    value must round-trip."""
+    sent = int(ops.pad_sentinel(jnp.int32))
+    k = jnp.asarray(np.stack([
+        np.full(200, sent, np.int32),                  # empty segment
+        np.full(200, 42, np.int32),                    # constant segment
+        np.arange(200, dtype=np.int32)[::-1].copy(),   # reversed
+    ]))
+    v = jnp.arange(3 * 200, dtype=jnp.int32).reshape(3, 200)
+    _assert_matches_oracle(k, v)
+
+
+def test_radix_matches_bitonic_on_keys():
+    """Keys (not payloads — bitonic is unstable) agree across kernels."""
+    rng = np.random.default_rng(3)
+    k = jnp.asarray(_keys(rng, (8, 256), np.int32))
+    a = ops.sort_segments(k, algo="radix")
+    b = ops.sort_segments(k, algo="bitonic")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sortable_bits_bijection():
+    """key -> sortable bits is monotone and exactly invertible."""
+    rng = np.random.default_rng(4)
+    for dtype in (np.int32, np.uint32, np.float32):
+        k = jnp.asarray(np.sort(_keys(rng, (4096,), dtype)))
+        bits = key_to_sortable_bits(k)
+        assert bool(jnp.all(bits[1:] >= bits[:-1])), dtype     # monotone
+        back = sortable_bits_to_key(bits, k.dtype)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(k))
+
+
+def test_radix_envelope_reported():
+    """Out-of-envelope shapes fail loudly with the recorded reason."""
+    assert radix_supported(256) is None
+    too_big = (autotune._RADIX_MEASURE_MAX_SEGLEN + 1) * 1024
+    reason = radix_supported(too_big, bits=8)
+    assert reason is not None and "VMEM" in reason
+    assert default_bits(too_big) == 4      # auto-narrows the digit first
+
+
+# -- autotuner ---------------------------------------------------------------
+
+
+def test_autotune_measures_once_and_replays():
+    rng = np.random.default_rng(5)
+    k = jnp.asarray(_keys(rng, (64, 256), np.int32))   # above MIN_MEASURE
+    v = jnp.arange(64 * 256, dtype=jnp.int32).reshape(64, 256)
+    assert 64 * 256 >= autotune.MIN_MEASURE_ELEMS
+    ops.sort_kv_segments(k, v)
+    key = autotune.cell_key(64, 256, jnp.int32, kv=True)
+    assert autotune.MEASUREMENTS[key] == 1
+    first = autotune._cache[key]
+    assert first.source == "measured"
+    assert set(first.melem) == {"bitonic", "radix", "oracle"}  # all ran
+    for _ in range(3):                      # replay: no second measurement
+        ops.sort_kv_segments(k, v)
+    assert autotune.MEASUREMENTS[key] == 1
+    assert autotune.choose(64, 256, jnp.int32).source == "cached"
+
+
+def test_autotune_small_shapes_skip_measurement():
+    rng = np.random.default_rng(6)
+    k = jnp.asarray(_keys(rng, (2, 64), np.int32))
+    ops.sort_segments(k)
+    assert not autotune.MEASUREMENTS
+    c = autotune.choose(2, 64, jnp.int32, kv=False)
+    assert c.algo == "oracle" and c.source in ("static", "cached")
+
+
+def test_autotune_force_env_wins():
+    """REPRO_KERNEL_FORCE beats the cache, the table, and a pinned algo."""
+    os.environ[autotune.FORCE_ENV] = "radix"
+    try:
+        assert autotune.choose(16, 4096, jnp.int32).algo == "radix"
+        assert autotune.choose(16, 4096, jnp.int32).source == "forced"
+        # ... even over an explicitly pinned algo at the ops layer
+        assert ops.resolve_sort_algo(16, 4096, jnp.int32,
+                                     algo="oracle") == "radix"
+        # and the forced kernel actually runs (and is right)
+        rng = np.random.default_rng(7)
+        k = jnp.asarray(_keys(rng, (4, 300), np.int32))
+        v = jnp.arange(4 * 300, dtype=jnp.int32).reshape(4, 300)
+        got_k, got_v = ops.sort_kv_segments(k, v)
+        want_k, want_v = ref.sort_kv_segments_ref(k, v)
+        np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+        os.environ[autotune.FORCE_ENV] = "quicksort"
+        with pytest.raises(ValueError, match="REPRO_KERNEL_FORCE"):
+            autotune.choose(16, 4096, jnp.int32)
+    finally:
+        del os.environ[autotune.FORCE_ENV]
+
+
+def test_autotune_table_replay_without_measurement():
+    """A persisted table (what BENCH_kernels.json carries) short-circuits
+    measurement entirely."""
+    key = autotune.cell_key(16, 4096, jnp.int32, kv=True)
+    autotune.load_table({key: {"algo": "bitonic"}})
+    c = autotune.choose(16, 4096, jnp.int32)
+    assert c.algo == "bitonic" and c.source == "table"
+    assert not autotune.MEASUREMENTS
+
+
+def test_autotune_export_round_trips():
+    rng = np.random.default_rng(8)
+    k = jnp.asarray(_keys(rng, (64, 256), np.int32))
+    v = jnp.arange(64 * 256, dtype=jnp.int32).reshape(64, 256)
+    ops.sort_kv_segments(k, v)
+    table = autotune.export_table()
+    autotune.reset()
+    autotune.load_table(table)
+    key = autotune.cell_key(64, 256, jnp.int32, kv=True)
+    assert autotune.choose(64, 256, jnp.int32).algo == table[key]["algo"]
+    assert not autotune.MEASUREMENTS
+
+
+def test_deprecated_use_pallas_still_works():
+    rng = np.random.default_rng(9)
+    k = jnp.asarray(_keys(rng, (2, 128), np.int32))
+    v = jnp.arange(256, dtype=jnp.int32).reshape(2, 128)
+    with pytest.warns(DeprecationWarning, match="autotuned"):
+        a = ops.sort_segments(k, True)                  # -> bitonic
+    with pytest.warns(DeprecationWarning, match="autotuned"):
+        b, _ = ops.sort_kv_segments(k, v, use_pallas=False)   # -> oracle
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- SPMD integration: over-capacity segments + streaming-path parity --------
+
+
+def test_radix_spmd_over_capacity_segments():
+    """Skewed keys overflow a segment's capacity under the radix stage-2
+    path: overflow is dropped AND counted, survivors stay globally sorted
+    (same §3.5.1 contract as the bitonic/oracle paths)."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.sort import terasort, is_globally_sorted
+
+mesh = jax.make_mesh((8,), ("data",))
+N = 8 * 512
+rng = np.random.default_rng(11)
+# heavy skew: half the keys land in one of 32 buckets (bpd=4)
+keys = rng.integers(0, np.iinfo(np.int32).max, size=N).astype(np.int32)
+keys[: N // 2] = keys[: N // 2] % 1000
+pay = np.arange(N, dtype=np.int32)
+with mesh:
+    res = terasort(jnp.asarray(keys), jnp.asarray(pay), mesh,
+                   buckets_per_device=4, capacity_factor=1.1,
+                   sort_algo="radix")
+assert int(res.dropped) > 0, "skew was supposed to overflow a segment"
+assert is_globally_sorted(res, 8)
+n_out = int(np.asarray(res.valid).sum())
+assert n_out + int(res.dropped) == N
+print("over-capacity ok", int(res.dropped))
+""")
+
+
+def test_radix_terasort_matches_oracle_terasort():
+    """End-to-end SPMD parity: radix stage-2 delivers exactly the oracle
+    stage-2's keys (same buckets, same capacities, stable both)."""
+    run_spmd("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.sort import terasort
+
+mesh = jax.make_mesh((8,), ("data",))
+N = 8 * 512
+rng = np.random.default_rng(12)
+keys = jnp.asarray(rng.integers(0, np.iinfo(np.int32).max, size=N)
+                   .astype(np.int32))
+pay = jnp.arange(N, dtype=jnp.int32)
+with mesh:
+    a = terasort(keys, pay, mesh, buckets_per_device=4, sort_algo="radix")
+    b = terasort(keys, pay, mesh, buckets_per_device=4, sort_algo="oracle")
+va, vb = np.asarray(a.valid), np.asarray(b.valid)
+assert (va == vb).all()
+assert (np.asarray(a.keys)[va] == np.asarray(b.keys)[vb]).all()
+assert (np.asarray(a.payload)[va] == np.asarray(b.payload)[vb]).all()
+print("radix == oracle end-to-end")
+""")
