@@ -1,0 +1,346 @@
+"""Chaos-hardened streaming soak: one stream, one multi-fault schedule.
+
+The soak runs the carried word-count stream of ``streaming_bench`` (3
+tenants at weights 1:3:4, permanently backlogged) for >= 30 micro-batches
+while a seeded :class:`~repro.sphere.chaos.ChaosSchedule` injects FOUR
+faults at batch boundaries:
+
+- ``lose_batch``  @ batch 4  — in-flight batch dropped, tickets requeue;
+- ``lose_device`` @ batch 10 — mesh shrinks 8 -> 4 devices, carry remeshed
+  from the boundary's :class:`~repro.sphere.chaos.StreamCheckpoint`,
+  exactly one recompile, tickets requeue;
+- ``kill_slave``  @ batch 16 — a Sector slave holding stream checkpoints
+  dies; the heartbeat :class:`~repro.sector.master.FailureDetector`
+  (suspect @ 0.5 steps, down @ 1.5 steps on the stream's virtual clock)
+  declares it down two boundaries later, triggering checkpoint
+  re-replication via ``client.recover``;
+- ``rejoin_slave`` @ batch 24 — the dead slave restarts and is re-absorbed
+  by the scan path; the detector logs the rejoin on its next heartbeat.
+
+The stream runs durably on the Sector deployment (``attach_sector``): every
+boundary uploads a versioned checkpoint, ticks the detector, and runs the
+belief-driven :class:`~repro.sector.master.ReplicationDaemon`.
+
+``--check`` asserts the ISSUE-10 acceptance criteria:
+
+- >= 30 micro-batches over >= 3 tenants, all 4 scheduled faults fired;
+- ``recoveries == 2`` (one elastic mesh recovery + one detector-driven
+  Sector recovery) and exactly 2 compile-cache misses (warm-up + the one
+  post-shrink recompile);
+- the final carry snapshot is multiset-identical to a fault-free one-shot
+  batch run over everything delivered, with zero duplicate deliveries and
+  zero failed requests (exactly-once end to end);
+- a second same-seed soak replays byte-identical ``(events, counts)``;
+- recovery overhead (run_seconds vs a chaos-free soak) stays bounded.
+
+Merges ``stream_chaos_*`` rows into ``BENCH_kernels.json`` and (with
+``--events-log``) writes the chaos audit log for the CI artifact.
+
+Run:  PYTHONPATH=src python benchmarks/stream_chaos_bench.py \
+          [--check] [--json P] [--events-log P]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:        # standalone: give the soak 8 devices
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import collections
+import json
+import tempfile
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VOCAB = 64
+NUM_BUCKETS = 8
+WEIGHTS = {"free": 1.0, "pro": 3.0, "enterprise": 4.0}
+DEPTH_TARGET = 12
+SCHEDULE_SEED = 7
+STEPS = 34                          # 2 batches fail -> 32 complete (>= 30)
+
+
+def _build_pipeline():
+    from repro.core.mapreduce import default_hash, reduce_by_key_sum
+    from repro.sphere.dataflow import Dataflow
+
+    def emit(rec):
+        return {"key": rec["word"].astype(jnp.int32),
+                "value": jnp.ones_like(rec["word"], jnp.int32)}
+
+    def count(rec, valid):
+        k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+        return {"key": k, "value": v}, k >= 0, dropped
+
+    return (Dataflow.stream_source()
+            .map(emit)
+            .shuffle(by=lambda r: default_hash(r["key"], NUM_BUCKETS),
+                     num_buckets=NUM_BUCKETS)
+            .reduce(count))
+
+
+def _schedule():
+    from repro.sphere.chaos import ChaosSchedule, FaultPlan
+    return ChaosSchedule([
+        FaultPlan(kind="lose_batch", at_batch=4),
+        FaultPlan(kind="lose_device", at_batch=10),
+        FaultPlan(kind="kill_slave", at_batch=16),
+        FaultPlan(kind="rejoin_slave", at_batch=24),
+    ], seed=SCHEDULE_SEED)
+
+
+def soak(chaos: bool = True, steps: int = STEPS) -> Dict[str, object]:
+    from repro.core.retry import RetryPolicy
+    from repro.launch.train import make_sector
+    from repro.sector.master import FailureDetector, ReplicationDaemon
+    from repro.sphere.dataflow import SPMDExecutor
+    from repro.sphere.streaming import (QueueFull, StreamExecutor,
+                                        TenantQueue)
+
+    ndev = len(jax.devices())
+    micro_batch = 64 * ndev
+    cost = micro_batch // 8
+    mesh = jax.make_mesh((ndev,), ("data",))
+    inner = SPMDExecutor(mesh)
+    queue = TenantQueue(quantum=float(cost), capacity=DEPTH_TARGET,
+                        max_requeues=5,
+                        # deterministic backoff on every requeue: < 1 step,
+                        # so a requeued ticket is ready again next batch
+                        retry_policy=RetryPolicy(base=0.25, cap=2.0,
+                                                 jitter=0.1, seed=3))
+    for name, w in WEIGHTS.items():
+        queue.register(name, weight=w)
+    vclock = {"now": 0.0}
+    schedule = _schedule() if chaos else None
+    ex = StreamExecutor(inner, _build_pipeline(), micro_batch=micro_batch,
+                        carry_capacity=VOCAB, queue=queue,
+                        clock=lambda: vclock["now"], chaos=schedule)
+
+    with tempfile.TemporaryDirectory() as root:
+        master, client, _ = make_sector(root, num_slaves=4, replication=2)
+        det = FailureDetector(master, suspect_after=0.5, down_after=1.5,
+                              clock=lambda: vclock["now"])
+        daemon = ReplicationDaemon(master, clock=lambda: vclock["now"],
+                                   detector=det)
+        ex.attach_sector(master, client, daemon=daemon, detector=det,
+                         retain=8)
+
+        rng = np.random.default_rng(0)
+
+        def make_request():
+            return {"word": rng.integers(0, VOCAB,
+                                         size=cost).astype(np.uint8)}
+
+        delivered_count: collections.Counter = collections.Counter()
+        delivered_payloads: Dict[int, np.ndarray] = {}
+        dropped = 0
+
+        def top_up():
+            for name in WEIGHTS:
+                for _ in range(DEPTH_TARGET + 2):
+                    try:
+                        ex.submit(make_request(), tenant=name)
+                    except QueueFull:
+                        break
+
+        def record(batch):
+            nonlocal dropped
+            if batch is None:
+                return
+            dropped += batch.dropped
+            for tk in batch.delivered:
+                delivered_count[tk.req_id] += 1
+                delivered_payloads[tk.req_id] = tk.payload["word"]
+
+        for step in range(steps):
+            vclock["now"] = float(step)
+            top_up()
+            record(ex.step())
+        # drain without top-up so every admitted request is delivered
+        while queue.pending():
+            vclock["now"] += 1.0
+            record(ex.step())
+
+        stats = ex.stats()
+        tstats = stats["tenants"]
+
+        # stream/batch equivalence: final carry snapshot vs one-shot over
+        # the concatenation of everything delivered — on a fresh full mesh
+        snap = ex.carry_state()
+        got = {int(k): int(v) for k, v in zip(snap["key"], snap["value"])}
+        allwords = np.concatenate([delivered_payloads[i]
+                                   for i in sorted(delivered_payloads)])
+        oneshot = SPMDExecutor(mesh)
+        with mesh:
+            res = oneshot.run(_build_pipeline(),
+                              {"word": jnp.asarray(allwords)})
+        rec = res.valid_records()
+        want = {int(k): int(v) for k, v in zip(rec["key"], rec["value"])}
+
+        return {
+            "ndev": ndev,
+            "end_devices": ex.inner.axis_size,
+            "micro_batch": micro_batch,
+            "tenants": len(WEIGHTS),
+            "steps": stats["steps"],
+            "records_in": stats["records_in"],
+            "records_per_s": stats["records_per_s"],
+            "run_seconds": stats["run_seconds"],
+            "batch_failures": stats["batch_failures"],
+            "recoveries": stats["recoveries"],
+            "cache": stats["cache"],
+            "faults_fired": (schedule.fired_count if schedule else 0),
+            "faults_total": (len(schedule.faults) if schedule else 0),
+            "events": list(schedule.events) if schedule else [],
+            "counts": dict(sorted(got.items())),
+            "detector": dict(det.stats),
+            "master": dict(master.stats),
+            "requeues": sum(t["requeues"] for t in tstats.values()),
+            "failed": sum(t["failed"] for t in tstats.values()),
+            "max_deliveries_per_request": max(delivered_count.values()),
+            "delivered_requests": len(delivered_count),
+            "dropped": dropped,
+            "stream_equals_batch": got == want,
+        }
+
+
+def check(res: Dict[str, object], replay: Dict[str, object],
+          baseline: Dict[str, object]) -> List[str]:
+    failures = []
+    if res["tenants"] < 3 or res["steps"] < 30:
+        failures.append(f"soak too small: {res['tenants']} tenants over "
+                        f"{res['steps']} micro-batches (need >=3 over >=30)")
+    if res["faults_fired"] != res["faults_total"] or res["faults_total"] < 3:
+        failures.append(f"schedule incomplete: {res['faults_fired']}/"
+                        f"{res['faults_total']} faults fired (need all, >=3)")
+    if res["recoveries"] != 2:
+        failures.append(f"recoveries={res['recoveries']} (want 2: one "
+                        f"elastic mesh recovery + one Sector recovery)")
+    if res["cache"]["misses"] != 2:
+        failures.append(f"cache misses={res['cache']['misses']} (want 2: "
+                        f"warm-up + exactly one post-shrink recompile)")
+    if res["max_deliveries_per_request"] != 1:
+        failures.append(f"duplicate delivery: a request completed "
+                        f"{res['max_deliveries_per_request']} times")
+    if res["failed"] or res["dropped"]:
+        failures.append(f"lost work: {res['failed']} failed requests, "
+                        f"{res['dropped']} dropped records")
+    if not res["stream_equals_batch"]:
+        failures.append("chaos-surviving stream snapshot != fault-free "
+                        "one-shot batch run multiset")
+    if (res["events"], res["counts"]) != (replay["events"],
+                                          replay["counts"]):
+        failures.append("same-seed replay diverged: (events, counts) not "
+                        "byte-identical across two runs")
+    overhead = res["run_seconds"] / max(baseline["run_seconds"], 1e-9)
+    if overhead > 10.0:
+        failures.append(f"recovery overhead {overhead:.1f}x the chaos-free "
+                        f"soak (want <= 10x)")
+    return failures
+
+
+def _merge_json(json_path: str, res: Dict[str, object],
+                baseline: Dict[str, object]) -> None:
+    try:
+        with open(json_path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        payload = {"schema": "repro.kernel_bench.v1", "results": {}}
+    payload.setdefault("results", {})
+    payload["results"]["stream_chaos_recovery_overhead"] = {
+        "owner": "stream_chaos",
+        "chaos_run_seconds": res["run_seconds"],
+        "baseline_run_seconds": baseline["run_seconds"],
+        "overhead_x": res["run_seconds"] / max(baseline["run_seconds"],
+                                               1e-9),
+        "recoveries": res["recoveries"],
+        "cache_misses": res["cache"]["misses"],
+        "ndev": res["ndev"], "end_devices": res["end_devices"],
+    }
+    payload["results"]["stream_chaos_exactly_once"] = {
+        "owner": "stream_chaos",
+        "delivered_requests": res["delivered_requests"],
+        "max_deliveries_per_request": res["max_deliveries_per_request"],
+        "requeues": res["requeues"], "failed": res["failed"],
+        "stream_equals_batch": res["stream_equals_batch"],
+    }
+    payload["results"]["stream_chaos_soak"] = {
+        "owner": "stream_chaos",
+        "steps": res["steps"], "tenants": res["tenants"],
+        "faults_fired": res["faults_fired"],
+        "batch_failures": res["batch_failures"],
+        "detector": res["detector"],
+        "events": len(res["events"]),
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def run(csv: bool = True, json_path: Optional[str] = None,
+        events_log: Optional[str] = None):
+    res = soak(chaos=True)
+    replay = soak(chaos=True)
+    baseline = soak(chaos=False)
+    overhead = res["run_seconds"] / max(baseline["run_seconds"], 1e-9)
+    replayed = (res["events"], res["counts"]) == (replay["events"],
+                                                  replay["counts"])
+    lines = [
+        f"stream_chaos_soak,0,{res['steps']} batches x {res['tenants']} "
+        f"tenants; {res['faults_fired']}/{res['faults_total']} faults "
+        f"fired; mesh {res['ndev']}->{res['end_devices']} devices",
+        f"stream_chaos_recovery,0,recoveries={res['recoveries']} "
+        f"cache_misses={res['cache']['misses']} overhead={overhead:.2f}x "
+        f"vs chaos-free",
+        f"stream_chaos_exactly_once,0,delivered={res['delivered_requests']} "
+        f"max_per_req={res['max_deliveries_per_request']} "
+        f"requeues={res['requeues']} failed={res['failed']} "
+        f"equal_to_batch={res['stream_equals_batch']}",
+        f"stream_chaos_replay,0,byte_identical={replayed} "
+        f"({len(res['events'])} audit events)",
+    ]
+    if json_path:
+        _merge_json(json_path, res, baseline)
+        lines.append(f"stream_chaos_json,0,merged into {json_path}")
+    if events_log:
+        with open(events_log, "w") as f:
+            f.write("\n".join(res["events"]) + "\n")
+        lines.append(f"stream_chaos_events,0,audit log -> {events_log}")
+    run.last_result = (res, replay, baseline)
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="merge results into this BENCH json")
+    ap.add_argument("--events-log", default=None,
+                    help="write the chaos audit log here (CI artifact)")
+    args = ap.parse_args()
+    if args.json is None and args.check:
+        args.json = "BENCH_kernels.json"   # gated runs always leave a row
+    for line in run(json_path=args.json, events_log=args.events_log):
+        print(line)
+    if args.check:
+        failures = check(*run.last_result)
+        if failures:
+            for f in failures:
+                print(f"CHECK FAIL: {f}")
+            sys.exit(1)
+        res = run.last_result[0]
+        print(f"CHECK OK: {res['steps']} micro-batches survived "
+              f"{res['faults_fired']} scheduled faults with "
+              f"{res['recoveries']} recoveries, exactly-once delivery, "
+              f"stream == batch, byte-identical same-seed replay")
+
+
+if __name__ == "__main__":
+    main()

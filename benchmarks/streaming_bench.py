@@ -72,6 +72,7 @@ def _build_pipeline():
 
 
 def soak(steps: int = 28) -> Dict[str, object]:
+    from repro.sphere.chaos import ChaosSchedule, FaultPlan
     from repro.sphere.dataflow import SPMDExecutor
     from repro.sphere.streaming import QueueFull, StreamExecutor, TenantQueue
 
@@ -88,7 +89,11 @@ def soak(steps: int = 28) -> Dict[str, object]:
     vclock = {"now": 0.0}
     ex = StreamExecutor(inner, _build_pipeline(), micro_batch=micro_batch,
                         carry_capacity=VOCAB, queue=queue,
-                        clock=lambda: vclock["now"])
+                        clock=lambda: vclock["now"],
+                        # one scheduled batch loss mid-soak (dispatch
+                        # failure -> requeue -> delivery, exactly once)
+                        chaos=ChaosSchedule(
+                            [FaultPlan(kind="lose_batch", at_batch=6)]))
 
     rng = np.random.default_rng(0)
 
@@ -129,9 +134,7 @@ def soak(steps: int = 28) -> Dict[str, object]:
             special = ex.submit(make_request(), tenant="enterprise",
                                 timeout=1.5)
         top_up()
-        if step == 6:
-            ex._fail_next_batch = True          # simulated lost batch
-        record(ex.step())
+        record(ex.step())       # the ChaosSchedule fires at batch 6
     fair = {n: s["records_served"]
             for n, s in queue.stats().items()}  # measured while backlogged
     # drain without top-up so every admitted request is delivered

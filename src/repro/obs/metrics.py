@@ -29,11 +29,17 @@ import threading
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
-           "DEFAULT_BUCKETS"]
+           "DEFAULT_BUCKETS", "MS_BUCKETS"]
 
 #: default histogram boundaries: powers of two from ~1µs to 64s (seconds
 #: scale) — wide enough for latencies and deterministic for percentiles.
 DEFAULT_BUCKETS: Tuple[float, ...] = tuple(2.0 ** e for e in range(-20, 7))
+
+#: millisecond-scale boundaries for retry/backoff-delay histograms
+#: (``host.backoff_ms``, ``tenant.backoff_ms``, ``sector.recover.backoff_ms``):
+#: a leading 0.0 bound gives zero-delay retries their own bucket, then powers
+#: of two from ~1µs to ~131s expressed in ms.
+MS_BUCKETS: Tuple[float, ...] = (0.0,) + tuple(2.0 ** e for e in range(-10, 18))
 
 
 class Counter:

@@ -13,13 +13,14 @@ It backs the training framework's dataset pipeline and checkpoint store.
 from repro.sector.topology import NodeAddress, Topology, distance
 from repro.sector.security import SecurityServer, AccessDenied
 from repro.sector.slave import SlaveNode
-from repro.sector.master import Master, FileMeta, ReplicationDaemon
+from repro.sector.master import (FailureDetector, FileMeta, Master,
+                                 ReplicationDaemon)
 from repro.sector.client import SectorClient
 from repro.sector.transport import LinkSpec, TransferSimulator
 
 __all__ = [
     "NodeAddress", "Topology", "distance",
     "SecurityServer", "AccessDenied",
-    "SlaveNode", "Master", "FileMeta", "ReplicationDaemon",
-    "SectorClient", "LinkSpec", "TransferSimulator",
+    "SlaveNode", "Master", "FileMeta", "FailureDetector",
+    "ReplicationDaemon", "SectorClient", "LinkSpec", "TransferSimulator",
 ]

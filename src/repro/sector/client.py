@@ -9,8 +9,12 @@ block-based stores).
 
 from __future__ import annotations
 
-from typing import List, Optional
+import time
+import zlib
+from typing import Callable, List, Optional
 
+from repro.core.retry import RetryPolicy
+from repro.obs.metrics import MS_BUCKETS, REGISTRY
 from repro.sector.master import FileMeta, Master
 from repro.sector.topology import NodeAddress
 
@@ -18,9 +22,18 @@ from repro.sector.topology import NodeAddress
 class SectorClient:
     def __init__(self, master: Master, user: str, password: str,
                  client_ip: str = "10.0.0.1",
-                 client_addr: Optional[NodeAddress] = None):
+                 client_addr: Optional[NodeAddress] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 recover_attempts: int = 1,
+                 sleep: Optional[Callable[[float], None]] = None):
         self.master = master
         self.client_addr = client_addr
+        #: backoff between :meth:`recover` attempts; the default policy and
+        #: ``recover_attempts=1`` keep the legacy fail-fast behaviour
+        self.retry_policy = (RetryPolicy() if retry_policy is None
+                             else retry_policy)
+        self.recover_attempts = max(1, int(recover_attempts))
+        self._sleep = time.sleep if sleep is None else sleep
         self._session = master.security.login(user, password, client_ip)
 
     @property
@@ -44,9 +57,25 @@ class SectorClient:
         """Mid-job recovery hook (paper §3.5.2): after a failed segment read,
         ask the master to prune stale replica locations, rediscover surviving
         copies by scan, and re-replicate the file back toward the replication
-        factor. Raises IOError when every copy is gone."""
+        factor.
+
+        Retries up to ``recover_attempts`` times under ``retry_policy`` —
+        a copy may come back mid-backoff (a rejoining slave) — recording
+        each delay in the ``sector.recover.backoff_ms`` histogram. Raises
+        IOError when every copy is still gone after the last attempt."""
         self.master.security.check_access(self.session_id, path, "r")
-        return self.master.recover_file(path)
+        key = zlib.crc32(path.encode())   # deterministic per-path jitter key
+        for attempt in range(self.recover_attempts):
+            try:
+                return self.master.recover_file(path)
+            except (IOError, OSError):
+                if attempt + 1 >= self.recover_attempts:
+                    raise
+                d = self.retry_policy.delay(attempt, key=key)
+                REGISTRY.histogram("sector.recover.backoff_ms",
+                                   bounds=MS_BUCKETS).observe(d * 1e3)
+                self._sleep(d)
+        raise AssertionError("unreachable")
 
     def ls(self, prefix: str = "/") -> List[FileMeta]:
         return self.master.list_dir(prefix)

@@ -16,6 +16,7 @@ compare against the paper's baseline design point.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -71,34 +72,41 @@ class Master:
         return [s for s in self.slaves.values() if s.alive]
 
     def mark_slave_down(self, slave_id: int) -> None:
-        """Heartbeat loss: drop the slave from every file's location set."""
+        """Heartbeat loss (declared by a :class:`FailureDetector`): drop the
+        slave from every file's location set."""
         for meta in self.index.values():
             meta.locations.discard(slave_id)
-
-    def heartbeat_sweep(self) -> None:
-        for sid, slave in self.slaves.items():
-            if not slave.alive:
-                self.mark_slave_down(sid)
 
     # -- metadata recovery ----------------------------------------------------
     def recover_from_scan(self) -> None:
         """Rebuild the entire index from slave directory scans (paper §2.2:
         'Sector can recover all the metadata it requires by simply scanning
-        the data directories on each slave')."""
+        the data directories on each slave').
+
+        Replica conflicts (same path, different md5) are resolved by
+        *majority vote across all live holders*, not by scan order: the
+        winning md5 is the one with the most holders, ties broken
+        deterministically by the lexicographically smallest md5. Losing
+        copies are deleted from their slaves."""
         self.index.clear()
-        for sid, slave in self.slaves.items():
-            if not slave.alive:
-                continue
-            for path, info in slave.scan().items():
-                meta = self.index.get(path)
-                if meta is None:
-                    self.index[path] = FileMeta(path, info.size, info.md5, {sid})
-                else:
-                    if meta.md5 != info.md5:
-                        # stale/corrupt replica: keep majority copy, drop this one
-                        slave.delete_file(path)
-                        continue
-                    meta.locations.add(sid)
+        # two passes: collect every live scan first, THEN vote per path — a
+        # single streaming pass would crown whichever copy was scanned first
+        infos: Dict[int, Dict[str, "LocalFileInfo"]] = {
+            sid: slave.scan() for sid, slave in self.slaves.items()
+            if slave.alive}
+        by_path: Dict[str, Dict[str, List[int]]] = {}
+        for sid, scan in infos.items():
+            for path, info in scan.items():
+                by_path.setdefault(path, {}).setdefault(info.md5, []).append(sid)
+        for path, groups in sorted(by_path.items()):
+            win = min(groups, key=lambda md5: (-len(groups[md5]), md5))
+            holders = groups[win]
+            info = infos[holders[0]][path]
+            self.index[path] = FileMeta(path, info.size, win, set(holders))
+            for md5, sids in groups.items():
+                if md5 != win:
+                    for sid in sids:
+                        self.slaves[sid].delete_file(path)
 
     # -- placement policy -----------------------------------------------------
     def _placement_candidates(self, size: int, exclude: Set[int]) -> List[SlaveNode]:
@@ -286,6 +294,99 @@ class Master:
         return meta
 
 
+class FailureDetector:
+    """Heartbeat-driven failure detection with an injectable clock.
+
+    State machine per slave (documented in docs/ARCHITECTURE.md)::
+
+        alive --no beat > suspect_after--> suspect
+        suspect --no beat > down_after----> down      (locations pruned,
+                                                       reported to the caller)
+        down --beat resumes---------------> rejoined  (re-absorbed via the
+                                                       §2.2 scan path, then
+                                                       alive again)
+
+    ``tick(now)`` is one detection pass: polling ``slave.alive`` stands in
+    for "a heartbeat message arrived since the last tick" — every state
+    decision is made from the recorded per-slave last-heartbeat timestamp
+    against ``now``, never from the flag itself, so detection latency is an
+    explicit, clock-injected property (virtual clocks in tests, wall time in
+    production). A gap exceeding ``down_after`` outright skips the suspect
+    hop. Returns the list of slave ids newly declared down this pass.
+
+    This replaces the retired manual ``Master.heartbeat_sweep``: an
+    *instant* detector (``suspect_after=down_after=0``) reproduces it
+    exactly, which is what :class:`ReplicationDaemon` builds when not handed
+    a shared detector.
+    """
+
+    ALIVE, SUSPECT, DOWN = "alive", "suspect", "down"
+
+    def __init__(self, master: Master, suspect_after: float = 5.0,
+                 down_after: float = 15.0, clock=time.time):
+        if down_after < suspect_after:
+            raise ValueError(
+                f"down_after ({down_after}) must be >= suspect_after "
+                f"({suspect_after})")
+        self.master = master
+        self.suspect_after = suspect_after
+        self.down_after = down_after
+        self.clock = clock
+        self.last_beat: Dict[int, float] = {}
+        self.state: Dict[int, str] = {}
+        #: human-readable transition log (mirrors the chaos audit-log style)
+        self.events: List[str] = []
+        self.stats = {"suspected": 0, "downed": 0, "rejoined": 0}
+
+    def believes_alive(self, slave_id: int) -> bool:
+        """The detector's *belief* — suspect still counts as alive (lazy
+        replication must not storm on a transient); only ``down`` does not.
+        A slave never yet observed falls back to its actual flag."""
+        st = self.state.get(slave_id)
+        if st is None:
+            s = self.master.slaves.get(slave_id)
+            return s is not None and s.alive
+        return st != self.DOWN
+
+    def tick(self, now: Optional[float] = None) -> List[int]:
+        now = self.clock() if now is None else now
+        newly_down: List[int] = []
+        for sid in sorted(self.master.slaves):
+            slave = self.master.slaves[sid]
+            st = self.state.get(sid, self.ALIVE)
+            if slave.alive:
+                self.last_beat[sid] = now
+                if st == self.DOWN:
+                    # rejoin: re-absorb surviving slices via the §2.2 scan
+                    self.master.register_slave(slave)
+                    self.stats["rejoined"] += 1
+                    self.events.append(
+                        f"t={now:g}: slave {sid} rejoined (incarnation "
+                        f"{slave.incarnation}); re-absorbed by scan")
+                elif st == self.SUSPECT:
+                    self.events.append(
+                        f"t={now:g}: slave {sid} cleared suspicion")
+                self.state[sid] = self.ALIVE
+                continue
+            # no heartbeat this pass: judge the silence by its age alone
+            age = now - self.last_beat.get(sid, -math.inf)
+            if st != self.DOWN and age > self.down_after:
+                self.state[sid] = self.DOWN
+                self.master.mark_slave_down(sid)
+                self.stats["downed"] += 1
+                newly_down.append(sid)
+                self.events.append(
+                    f"t={now:g}: slave {sid} down "
+                    f"(no heartbeat for {age:g}s)")
+            elif st == self.ALIVE and age > self.suspect_after:
+                self.state[sid] = self.SUSPECT
+                self.stats["suspected"] += 1
+                self.events.append(
+                    f"t={now:g}: slave {sid} suspected "
+                    f"(no heartbeat for {age:g}s)")
+        return newly_down
+
+
 class ReplicationDaemon:
     """Periodic replication check (paper §2.2): for every under-replicated
     file, create a new copy on a topology-spread slave. Run ``tick()`` from
@@ -296,21 +397,34 @@ class ReplicationDaemon:
     re-replication storm): a tick arriving sooner than ``period`` seconds
     after the last effective one is a no-op. ``period=0`` keeps the old
     always-run behaviour; ``clock`` is injectable for tests.
+
+    Liveness comes from a :class:`FailureDetector`, ticked at the start of
+    every effective pass, and replica counting follows the detector's
+    *belief*: a silent-but-not-yet-down slave's copies still count, so the
+    daemon never storms ahead of detection. When no detector is passed the
+    daemon builds an instant one (``suspect_after=down_after=0``), which
+    reproduces the retired manual ``heartbeat_sweep`` exactly.
     """
 
-    def __init__(self, master: Master, period: float = 0.0, clock=time.time):
+    def __init__(self, master: Master, period: float = 0.0, clock=time.time,
+                 detector: Optional[FailureDetector] = None):
         self.master = master
         self.period = period
         self.clock = clock
+        if detector is None:
+            detector = FailureDetector(master, suspect_after=0.0,
+                                       down_after=0.0, clock=clock)
+        self.detector = detector
         self._last: Optional[float] = None
 
     def under_replicated(self) -> List[FileMeta]:
         m = self.master
+        det = self.detector
         return [
             meta for meta in m.index.values()
             if meta.locations and
             len([s for s in meta.locations
-                 if s in m.slaves and m.slaves[s].alive]) < m.replication_factor
+                 if det.believes_alive(s)]) < m.replication_factor
         ]
 
     def tick(self, max_copies: int = 1 << 30, force: bool = False) -> int:
@@ -323,12 +437,13 @@ class ReplicationDaemon:
             return 0
         self._last = self.clock()
         m = self.master
-        m.heartbeat_sweep()
+        self.detector.tick()
         created = 0
         for meta in self.under_replicated():
             if created >= max_copies:
                 break
-            live = [s for s in meta.locations if s in m.slaves and m.slaves[s].alive]
+            live = [s for s in meta.locations
+                    if self.detector.believes_alive(s)]
             if not live:
                 m.stats["lost_files"] += 1
                 continue

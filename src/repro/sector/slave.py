@@ -45,6 +45,9 @@ class SlaveNode:
         self.ip = ip
         self.capacity_bytes = capacity_bytes
         self.alive = True
+        #: bumped on every restart — lets failure-detector audit logs tell
+        #: one incarnation of a flapping node from the next.
+        self.incarnation = 0
         #: number of in-flight services; the master prefers non-busy slaves.
         self.active_services = 0
         os.makedirs(root, exist_ok=True)
@@ -136,3 +139,4 @@ class SlaveNode:
 
     def restart(self) -> None:
         self.alive = True
+        self.incarnation += 1

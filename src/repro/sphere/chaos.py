@@ -34,13 +34,33 @@ Fault kinds and the recovery path each one exercises:
     (:func:`repro.train.elastic.shrink_mesh`), re-shards the checkpoint onto
     it (:func:`repro.train.elastic.remesh`) and resumes the interrupted hop.
 
+``rejoin_slave`` (HostExecutor / streaming) — a previously-killed storage
+    node comes back: the slave restarts and the master re-absorbs whatever
+    survives on its disk via the §2.2 scan path (``register_slave``). With a
+    :class:`~repro.sector.master.FailureDetector` attached, its resumed
+    heartbeats also flip the detector's belief back to alive.
+
+``lose_batch``   (StreamExecutor) — the in-flight micro-batch is lost at a
+    batch boundary; every ticket of the batch is requeued through
+    :class:`~repro.sphere.streaming.TenantQueue` (exactly-once preserved)
+    and re-dispatched on a later step.
+
 ``none``         — no fault; with ``SPMDExecutor.run(chaos=...)`` it still
     forces the segmented per-hop execution path, which is how the tests
     prove segmented == fused before trusting the recovery runs.
 
+Single faults are described by a :class:`FaultPlan`; an ordered *sequence*
+of faults — armed at phase boundaries (``phase=``) or stream batch indices
+(``at_batch=``) — is a :class:`ChaosSchedule`, which derives every member's
+seed from its own seed + position and shares one audit log, so a multi-fault
+run replays byte-identically too.
+
 The headline invariant, asserted by ``tests/test_chaos.py``: **the delivered
 multiset is unchanged under any single injected failure between stage A and
 stage B**, for both executors and both (flat / hierarchical) topologies.
+PR 10 extends it to streams: a continuously-serving StreamExecutor under a
+multi-fault schedule delivers the same snapshot as the fault-free one-shot
+batch run, with zero duplicate ticket deliveries.
 """
 
 from __future__ import annotations
@@ -55,9 +75,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.records import RecordCodec
 
-HOST_KINDS = ("kill_slave", "drop_bucket")
+HOST_KINDS = ("kill_slave", "drop_bucket", "rejoin_slave")
 SPMD_KINDS = ("lose_device",)
-KINDS = ("none",) + HOST_KINDS + SPMD_KINDS
+STREAM_KINDS = ("lose_batch",)
+KINDS = ("none",) + HOST_KINDS + SPMD_KINDS + STREAM_KINDS
+
+
+def plan_kinds(chaos: Any) -> Tuple[str, ...]:
+    """The fault kinds a plan or schedule can fire — the executors' guard
+    rails accept either a :class:`FaultPlan` (``.kind``) or a
+    :class:`ChaosSchedule` (``.kinds``)."""
+    kinds = getattr(chaos, "kinds", None)
+    if kinds is not None:
+        return tuple(kinds)
+    return (chaos.kind,)
 
 
 @dataclasses.dataclass
@@ -69,10 +100,18 @@ class FaultPlan:
     phase, i.e. against the source files / initial shards; 1 = between the
     first and second phase — "between stage A and stage B").
 
-    ``victim`` pins the target (slave id for ``kill_slave``, global device
-    index for ``lose_device``); ``path`` pins the file for ``drop_bucket``.
-    When unset, the target is drawn from a ``random.Random(seed)`` over the
-    *sorted* candidate set — deterministic per (plan, deployment).
+    ``victim`` pins the target (slave id for ``kill_slave``/``rejoin_slave``,
+    global device index for ``lose_device``); ``path`` pins the file for
+    ``drop_bucket``. When unset, the target is drawn from a
+    ``random.Random(seed)`` over the *sorted* candidate set — deterministic
+    per (plan, deployment).
+
+    ``at_batch`` arms the fault at a StreamExecutor micro-batch boundary
+    instead of a phase boundary: batch ``b`` means *before* micro-batch
+    ``b`` is dispatched. Batch-armed faults are fired via
+    :meth:`fire_stream` (normally through a :class:`ChaosSchedule` given to
+    ``StreamExecutor(chaos=...)``) and are ignored by the batch executors'
+    ``fire_host`` / ``fire_spmd``.
     """
 
     kind: str = "none"
@@ -82,6 +121,8 @@ class FaultPlan:
     #: ``kill_slave``: also lose the disk (the harsher variant)
     wipe: bool = True
     seed: int = 0
+    #: arm at a stream micro-batch index instead of a phase boundary
+    at_batch: Optional[int] = None
     fired: bool = dataclasses.field(default=False, init=False)
     #: human-readable audit log of what was actually broken
     events: List[str] = dataclasses.field(default_factory=list, init=False)
@@ -94,7 +135,8 @@ class FaultPlan:
         # integer mix, NOT hash(tuple): str hashes vary per-process with
         # PYTHONHASHSEED, and a chaos plan must replay identically anywhere
         mix = 0
-        for part in (self.seed, KINDS.index(self.kind), self.phase):
+        batch = -1 if self.at_batch is None else self.at_batch
+        for part in (self.seed, KINDS.index(self.kind), self.phase, batch):
             mix = mix * 1000003 + part
         return random.Random(mix)
 
@@ -104,16 +146,23 @@ class FaultPlan:
         """Called by :class:`~repro.sphere.dataflow.HostExecutor` at every
         phase boundary with that phase's input ``paths``. Injects the fault
         iff this is the armed boundary; returns whether it fired."""
-        if self.fired or boundary != self.phase or self.kind not in HOST_KINDS:
+        if (self.fired or self.at_batch is not None
+                or boundary != self.phase or self.kind not in HOST_KINDS):
             return False
-        if self.kind == "kill_slave":
-            self._kill_slave(boundary, master, paths, spes)
-        else:
-            self._drop_bucket(boundary, master, paths)
+        self._fire_host_kind(f"boundary {boundary}", master, paths, spes)
         self.fired = True
         return True
 
-    def _kill_slave(self, boundary: int, master, paths: Sequence[str],
+    def _fire_host_kind(self, label: str, master, paths: Sequence[str],
+                        spes: Sequence[Any]) -> None:
+        if self.kind == "kill_slave":
+            self._kill_slave(label, master, paths, spes)
+        elif self.kind == "rejoin_slave":
+            self._rejoin_slave(label, master)
+        else:
+            self._drop_bucket(label, master, paths)
+
+    def _kill_slave(self, label: str, master, paths: Sequence[str],
                     spes: Sequence[Any]) -> None:
         if self.victim is not None:
             slave = master.slaves[self.victim]
@@ -138,11 +187,30 @@ class FaultPlan:
                 spe.fail_after = spe.segments_done
                 crashed.append(spe.spe_id)
         self.events.append(
-            f"boundary {boundary}: killed slave {slave.slave_id} "
+            f"{label}: killed slave {slave.slave_id} "
             f"at {slave.address}{' (disk wiped)' if self.wipe else ''}; "
             f"crashed SPEs {crashed}")
 
-    def _drop_bucket(self, boundary: int, master, paths: Sequence[str]) -> None:
+    def _rejoin_slave(self, label: str, master) -> None:
+        if self.victim is not None:
+            slave = master.slaves[self.victim]
+        else:
+            dead = sorted((s for s in master.slaves.values() if not s.alive),
+                          key=lambda s: s.slave_id)
+            if not dead:
+                raise RuntimeError("rejoin_slave: no dead slave to rejoin")
+            slave = self._rng().choice(dead)
+        slave.restart()
+        # the §2.2 scan path re-absorbs whatever survived on its disk; a
+        # FailureDetector, if one is watching, also re-registers on the
+        # slave's next heartbeat — both are idempotent
+        master.register_slave(slave)
+        self.events.append(
+            f"{label}: slave {slave.slave_id} rejoined at {slave.address} "
+            f"(incarnation {slave.incarnation}); "
+            f"re-absorbed {len(slave.scan())} files by scan")
+
+    def _drop_bucket(self, label: str, master, paths: Sequence[str]) -> None:
         cands = []
         for p in sorted(set(paths)):
             meta = master.lookup(p)
@@ -182,23 +250,126 @@ class FaultPlan:
             if sid != keep:
                 master.slaves[sid].drop_file(path)
         self.events.append(
-            f"boundary {boundary}: dropped {path} from listed holders "
+            f"{label}: dropped {path} from listed holders "
             f"{[s for s in holders if s != keep]}; {where}")
 
     # -- SPMD (device) faults -------------------------------------------------
     def fire_spmd(self, boundary: int, num_devices: int) -> Optional[int]:
         """Called by the SPMD executor at every hop boundary. Returns the
         global index of the lost device when the fault fires, else None."""
-        if self.fired or boundary != self.phase or self.kind not in SPMD_KINDS:
+        if (self.fired or self.at_batch is not None
+                or boundary != self.phase or self.kind not in SPMD_KINDS):
             return None
-        lost = (self.victim if self.victim is not None
-                else self._rng().randrange(num_devices))
-        if not 0 <= lost < num_devices:
-            raise ValueError(f"victim device {lost} out of range {num_devices}")
+        lost = self._pick_device(num_devices)
         self.fired = True
         self.events.append(
             f"boundary {boundary}: lost device {lost}/{num_devices}")
         return lost
+
+    def _pick_device(self, num_devices: int) -> int:
+        lost = (self.victim if self.victim is not None
+                else self._rng().randrange(num_devices))
+        if not 0 <= lost < num_devices:
+            raise ValueError(f"victim device {lost} out of range {num_devices}")
+        return lost
+
+    # -- stream (micro-batch boundary) faults ---------------------------------
+    def fire_stream(self, batch: int, *, master: Any = None,
+                    paths: Sequence[str] = (),
+                    num_devices: Optional[int] = None) -> Optional[Any]:
+        """Called by :class:`~repro.sphere.streaming.StreamExecutor` at every
+        micro-batch boundary (normally via
+        :meth:`ChaosSchedule.due_at_batch`). Fires iff this fault is armed at
+        batch index ``batch``. Returns the lost device index for
+        ``lose_device``, ``True`` for every other kind that fired, ``None``
+        when not due.
+
+        Host kinds need the stream's attached Sector deployment (``master``;
+        ``paths`` are the stream's durable checkpoint files, the only Sector
+        state a pure stream owns)."""
+        if self.fired or self.at_batch != batch or self.kind == "none":
+            return None
+        label = f"batch {batch}"
+        if self.kind in SPMD_KINDS:
+            if num_devices is None:
+                raise ValueError("lose_device needs num_devices")
+            lost = self._pick_device(num_devices)
+            self.fired = True
+            self.events.append(f"{label}: lost device {lost}/{num_devices}")
+            return lost
+        if self.kind in HOST_KINDS:
+            if master is None:
+                raise ValueError(
+                    f"{self.kind!r} at a batch boundary needs an attached "
+                    f"Sector deployment (StreamExecutor.attach_sector)")
+            self._fire_host_kind(label, master, paths, spes=())
+            self.fired = True
+            return True
+        # lose_batch: the executor requeues the in-flight tickets
+        self.fired = True
+        self.events.append(f"{label}: lost in-flight micro-batch")
+        return True
+
+
+class ChaosSchedule:
+    """An ordered, seeded sequence of :class:`FaultPlan` faults.
+
+    Every member's seed is re-derived from ``(schedule seed, position, its
+    own seed)`` with the same integer mix the plans use, and all members
+    share ONE ``events`` audit log — so a multi-fault run carries the same
+    deterministic-replay guarantee as a single plan: same schedule + same
+    deployment => byte-identical events, in firing order.
+
+    A schedule is a drop-in for a single plan on the batch executors
+    (``fire_host`` / ``fire_spmd`` delegate to every *phase-armed* member);
+    batch-armed members (``at_batch=``) are consumed by ``StreamExecutor``
+    via :meth:`due_at_batch`.
+    """
+
+    def __init__(self, faults: Sequence[FaultPlan], seed: int = 0):
+        self.seed = seed
+        self.faults: List[FaultPlan] = list(faults)
+        self.events: List[str] = []
+        for i, f in enumerate(self.faults):
+            f.seed = (seed * 1000003 + i) * 1000003 + f.seed
+            f.events = self.events    # shared, ordered audit log
+
+    @property
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(f.kind for f in self.faults)
+
+    @property
+    def fired(self) -> bool:
+        """True once every member has fired."""
+        return all(f.fired for f in self.faults)
+
+    @property
+    def fired_count(self) -> int:
+        return sum(f.fired for f in self.faults)
+
+    def due_at_batch(self, batch: int) -> List[FaultPlan]:
+        """Unfired members armed at stream batch index ``batch``, in order."""
+        return [f for f in self.faults
+                if not f.fired and f.at_batch == batch]
+
+    def fire_host(self, boundary: int, master, paths: Sequence[str],
+                  spes: Sequence[Any] = ()) -> bool:
+        fired = False
+        for f in self.faults:
+            fired = f.fire_host(boundary, master, paths, spes) or fired
+        return fired
+
+    def fire_spmd(self, boundary: int, num_devices: int) -> Optional[int]:
+        for f in self.faults:
+            lost = f.fire_spmd(boundary, num_devices)
+            if lost is not None:
+                return lost
+        return None
+
+    def __repr__(self) -> str:
+        arms = [f"{f.kind}@{'batch ' + str(f.at_batch) if f.at_batch is not None else 'phase ' + str(f.phase)}"
+                for f in self.faults]
+        return f"ChaosSchedule(seed={self.seed}, faults=[{', '.join(arms)}])"
 
 
 @dataclasses.dataclass
@@ -238,3 +409,110 @@ class HopCheckpoint:
         tree = (records, self.valid)
         specs = jax.tree.map(lambda _: spec, tree)
         return elastic.remesh(tree, mesh, specs)
+
+
+@dataclasses.dataclass
+class StreamCheckpoint:
+    """Stream state sealed at a micro-batch boundary: the carry buffer plus
+    the in-flight ticket ids of the batch about to be dispatched.
+
+    The carry travels as a :class:`HopCheckpoint` over the FULL padded carry
+    buffer (valid and invalid rows alike), *not* a dense compaction: the
+    compiled stream function derives its per-device carry capacity from the
+    input carry's shape and compacts its output back to the same capacity,
+    so keeping the global shape constant across a mesh shrink means exactly
+    one recompile — and because per-device slices stay contiguous, restoring
+    onto any survivor mesh whose extent divides the old one lands every old
+    device's carry whole on the new device that owns its buckets (the same
+    layout-agnostic divisor property ``HopCheckpoint`` gives batch hops).
+
+    ``to_bytes``/``from_bytes`` give the checkpoint a byte-deterministic
+    durable form for upload into Sector (flat dict-of-array records only —
+    every stream pipeline's reduce state in this repo is one).
+    """
+
+    step: int
+    ticket_ids: Tuple[int, ...]
+    carry: Optional[HopCheckpoint]
+
+    MAGIC = b"SCKP1\n"
+
+    @classmethod
+    def seal(cls, step: int, tickets: Sequence[Any],
+             carry: Optional[Tuple[Any, Any]]) -> "StreamCheckpoint":
+        """Seal the boundary before dispatching ``tickets``: ``carry`` is the
+        executor's ``(records, valid)`` padded carry pair (or None before the
+        first stateful batch)."""
+        hc = None
+        if carry is not None:
+            records, valid = carry
+            hc = HopCheckpoint.snapshot(records, valid, hop=int(step),
+                                        dropped=0)
+        return cls(step=int(step),
+                   ticket_ids=tuple(t.req_id for t in tickets), carry=hc)
+
+    def restore_carry(self, mesh: Mesh,
+                      axes: Sequence[str]) -> Optional[Tuple[Any, Any]]:
+        """Re-shard the padded carry onto ``mesh`` (e.g. the survivor mesh
+        after ``lose_device``); None when the stream had no carry yet."""
+        if self.carry is None:
+            return None
+        return self.carry.restore(mesh, axes)
+
+    def to_bytes(self) -> bytes:
+        """Byte-deterministic serialization (no timestamps): MAGIC, an
+        8-byte little-endian header length, a JSON header, then the raw
+        array buffers in header order."""
+        import json as _json
+
+        header: dict = {"step": self.step, "tickets": list(self.ticket_ids),
+                        "carry": self.carry is not None}
+        blobs: List[bytes] = []
+        if self.carry is not None:
+            recs = self.carry.codec.decode(self.carry.payload)
+            if not (isinstance(recs, dict)
+                    and all(isinstance(v, np.ndarray) for v in recs.values())):
+                raise TypeError(
+                    "StreamCheckpoint durability needs flat dict-of-array "
+                    f"records, got {jax.tree.structure(recs)}")
+            header["hop"] = self.carry.hop
+            header["dropped"] = self.carry.dropped
+            fields = []
+            for name in sorted(recs):
+                a = np.ascontiguousarray(recs[name])
+                fields.append([name, a.dtype.str, list(a.shape)])
+                blobs.append(a.tobytes())
+            valid = np.ascontiguousarray(self.carry.valid)
+            fields.append(["__valid__", valid.dtype.str, list(valid.shape)])
+            blobs.append(valid.tobytes())
+            header["fields"] = fields
+        head = _json.dumps(header, sort_keys=True).encode()
+        out = [self.MAGIC, len(head).to_bytes(8, "little"), head]
+        out.extend(blobs)
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "StreamCheckpoint":
+        import json as _json
+
+        if not data.startswith(cls.MAGIC):
+            raise ValueError("not a StreamCheckpoint byte stream")
+        off = len(cls.MAGIC)
+        hlen = int.from_bytes(data[off:off + 8], "little")
+        off += 8
+        header = _json.loads(data[off:off + hlen].decode())
+        off += hlen
+        carry = None
+        if header["carry"]:
+            arrays = {}
+            for name, dtype, shape in header["fields"]:
+                n = int(np.prod(shape)) if shape else 1
+                nbytes = n * np.dtype(dtype).itemsize
+                arrays[name] = np.frombuffer(
+                    data[off:off + nbytes], dtype=dtype).reshape(shape)
+                off += nbytes
+            valid = arrays.pop("__valid__")
+            carry = HopCheckpoint.snapshot(arrays, valid, hop=header["hop"],
+                                           dropped=header["dropped"])
+        return cls(step=header["step"], ticket_ids=tuple(header["tickets"]),
+                   carry=carry)

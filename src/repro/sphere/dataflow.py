@@ -402,7 +402,8 @@ class SPMDExecutor:
         ``records``: pytree of global arrays (or a
         :class:`repro.core.stream.SphereStream`, whose ``valid`` is used).
 
-        ``chaos``: a :class:`repro.sphere.chaos.FaultPlan`. When given, the
+        ``chaos``: a :class:`repro.sphere.chaos.FaultPlan` or
+        :class:`~repro.sphere.chaos.ChaosSchedule`. When given, the
         pipeline runs *segmented* — one compiled program per shuffle-hop
         phase, with a :class:`~repro.sphere.chaos.HopCheckpoint` sealed at
         every boundary — instead of one fused program, so an injected
@@ -638,13 +639,19 @@ class SPMDExecutor:
         checkpoint (``elastic.remesh`` re-shards the layout-agnostic byte
         rows — every old shard lands whole on one new device, so the
         delivered multiset is identical to the fault-free run)."""
-        from repro.sphere.chaos import HOST_KINDS, HopCheckpoint
+        from repro.sphere.chaos import (HOST_KINDS, STREAM_KINDS,
+                                        HopCheckpoint, plan_kinds)
         from repro.train import elastic
 
-        if chaos.kind in HOST_KINDS:
-            raise ValueError(
-                f"{chaos.kind!r} is a Sector-level fault; inject it via "
-                f"HostExecutor.run(chaos=...)")
+        for kind in plan_kinds(chaos):
+            if kind in HOST_KINDS:
+                raise ValueError(
+                    f"{kind!r} is a Sector-level fault; inject it via "
+                    f"HostExecutor.run(chaos=...)")
+            if kind in STREAM_KINDS:
+                raise ValueError(
+                    f"{kind!r} is a streaming fault; inject it via "
+                    f"StreamExecutor(chaos=...)")
         if carry is not None:
             raise ValueError("chaos injection does not compose with "
                              "streaming carry state")
@@ -943,11 +950,15 @@ class HostExecutor:
 
     def __init__(self, master, client, spes: Sequence[Any],
                  max_retries: int = 2, scratch_prefix: str = "/.dataflow",
-                 daemon: Optional[Any] = None):
+                 daemon: Optional[Any] = None,
+                 retry_policy: Optional[Any] = None):
         self.master = master
         self.client = client
         self.spes = list(spes)
         self.max_retries = max_retries
+        #: optional :class:`repro.core.retry.RetryPolicy` for the engine's
+        #: segment re-pools (None keeps immediate zero-delay retries)
+        self.retry_policy = retry_policy
         self.scratch_prefix = scratch_prefix
         #: optional :class:`repro.sector.master.ReplicationDaemon`; when set,
         #: freshly uploaded bucket files are replicated before the next phase
@@ -962,8 +973,10 @@ class HostExecutor:
         required: it decodes the source records (record_bytes =
         ``codec.nbytes``).
 
-        ``chaos``: a :class:`repro.sphere.chaos.FaultPlan` fired at each
-        phase boundary (``kill_slave`` / ``drop_bucket``). Recovery is
+        ``chaos``: a :class:`repro.sphere.chaos.FaultPlan` or
+        :class:`~repro.sphere.chaos.ChaosSchedule` fired at each phase
+        boundary (``kill_slave`` / ``drop_bucket`` / ``rejoin_slave``).
+        Recovery is
         always armed regardless: segment reads that fail because every
         listed replica is gone trigger ``SectorClient.recover`` (master
         prunes stale locations, rediscovers survivors by §2.2 scan,
@@ -975,13 +988,19 @@ class HostExecutor:
         for bucket materialization. Per-phase wall time is ALWAYS
         accounted in ``result.phase_times`` (a cheap ``time.monotonic``
         pair), tracer or not."""
-        from repro.sphere.chaos import SPMD_KINDS
+        from repro.sphere.chaos import SPMD_KINDS, STREAM_KINDS, plan_kinds
         from repro.sphere.engine import SphereProcess
 
-        if chaos is not None and chaos.kind in SPMD_KINDS:
-            raise ValueError(
-                f"{chaos.kind!r} is a device-mesh fault; inject it via "
-                f"SPMDExecutor.run(chaos=...)")
+        if chaos is not None:
+            for kind in plan_kinds(chaos):
+                if kind in SPMD_KINDS:
+                    raise ValueError(
+                        f"{kind!r} is a device-mesh fault; inject it via "
+                        f"SPMDExecutor.run(chaos=...)")
+                if kind in STREAM_KINDS:
+                    raise ValueError(
+                        f"{kind!r} is a streaming fault; inject it via "
+                        f"StreamExecutor(chaos=...)")
 
         if pipeline.codec is None:
             raise ValueError("HostExecutor needs Dataflow.source(codec=...) "
@@ -1012,7 +1031,8 @@ class HostExecutor:
                         chaos.fire_host(pi, self.master, paths, self.spes)
                     proc = SphereProcess(self.master, self.client.session_id,
                                          self.spes,
-                                         max_retries=self.max_retries)
+                                         max_retries=self.max_retries,
+                                         retry_policy=self.retry_policy)
                     holder: Dict[str, Any] = {"codec": None, "dropped": 0}
                     udf = self._phase_udf(phase, pending_sort, holder)
                     nb = self._num_buckets(term)

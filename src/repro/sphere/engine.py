@@ -20,8 +20,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.records import RecordCodec
+from repro.core.retry import RetryPolicy
 from repro.core.stream import SegmentInfo, SphereStream
-from repro.obs.metrics import REGISTRY
+from repro.obs.metrics import MS_BUCKETS, REGISTRY
 from repro.obs.trace import NULL_TRACER
 from repro.sector.master import Master
 from repro.sector.topology import NodeAddress
@@ -59,11 +60,32 @@ class SphereProcess:
     """myproc.run(stream, udf) — the paper's client API (§3.1 pseudo-code)."""
 
     def __init__(self, master: Master, session_id: int,
-                 spes: Sequence[SPE], max_retries: int = 2):
+                 spes: Sequence[SPE], max_retries: int = 2,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 sleep: Optional[Callable[[float], None]] = None):
         self.master = master
         self.session_id = session_id
         self.spes = list(spes)
         self.max_retries = max_retries
+        #: backoff between segment re-pools; the zero-base default keeps
+        #: retries immediate while still recording the (zero) delays
+        self.retry_policy = (RetryPolicy() if retry_policy is None
+                             else retry_policy)
+        self._sleep = time.sleep if sleep is None else sleep
+
+    def _backoff(self, tr: Any, seg_i: int, attempt: int,
+                 reason: str) -> None:
+        """Account one re-pool: delay per the policy (keyed by segment so
+        concurrent retriers de-synchronize), record it in the
+        ``host.backoff_ms`` histogram, and stamp the ``retry`` trace event
+        with the attempt number and the delay actually taken."""
+        d = self.retry_policy.delay(max(0, attempt - 1), key=seg_i)
+        REGISTRY.histogram("host.backoff_ms",
+                           bounds=MS_BUCKETS).observe(d * 1e3)
+        tr.event("retry", segment=seg_i, reason=reason, attempt=attempt,
+                 delay_ms=round(d * 1e3, 3))
+        if d > 0:
+            self._sleep(d)
 
     def segment_stream(self, file_paths: Sequence[str], record_bytes: int,
                        s_min: int = 1, s_max: int = 1 << 30,
@@ -177,8 +199,8 @@ class SphereProcess:
                     else:
                         retries += 1
                         REGISTRY.counter("host.retries").inc()
-                        tr.event("retry", segment=seg_i,
-                                 reason="segment_lost")
+                        self._backoff(tr, seg_i, attempt[seg_i],
+                                      reason="segment_lost")
                         pending.append(seg_i)     # re-pool (paper §3.5.2)
                     continue
                 except (IOError, OSError) as e:   # SPE/node failure
@@ -191,8 +213,8 @@ class SphereProcess:
                         errors[seg_i] = f"DATA_ERROR: gave up: {e}"
                         REGISTRY.counter("host.data_errors").inc()
                     else:
-                        tr.event("retry", segment=seg_i,
-                                 reason="spe_failure")
+                        self._backoff(tr, seg_i, attempt[seg_i],
+                                      reason="spe_failure")
                         pending.append(seg_i)     # reassign (paper §3.5.2)
                     continue
                 except Exception as e:            # data/UDF error
@@ -207,7 +229,8 @@ class SphereProcess:
                     else:
                         retries += 1
                         REGISTRY.counter("host.retries").inc()
-                        tr.event("retry", segment=seg_i, reason="udf_error")
+                        self._backoff(tr, seg_i, attempt[seg_i],
+                                      reason="udf_error")
                         pending.append(seg_i)
                     continue
                 ssp.set(outcome="ok")

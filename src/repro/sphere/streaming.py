@@ -52,6 +52,7 @@ the stream/batch equivalence tests assert exactly that.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -61,11 +62,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.records import RecordCodec
-from repro.obs.metrics import REGISTRY
+from repro.core.retry import RetryPolicy
+from repro.obs.metrics import MS_BUCKETS, REGISTRY
 from repro.obs.trace import NULL_TRACER
+from repro.sphere.chaos import (SPMD_KINDS, STREAM_KINDS, ChaosSchedule,
+                                StreamCheckpoint)
 from repro.sphere.dataflow import (Dataflow, MapStage, ReduceStage,
-                                   SPMDExecutor, _last_reduce_index,
-                                   _leading, _split_reduce_out)
+                                   SortStage, SPMDExecutor,
+                                   _last_reduce_index, _leading, _phases,
+                                   _split_reduce_out)
 from repro.sphere.scheduler import DeadlineHeap, SegStatus
 
 
@@ -96,6 +101,9 @@ class Ticket:
     attempts: int = 0                  # times dispatched into a batch
     requeues: int = 0                  # timeout / failure re-admissions
     completed_at: Optional[float] = None
+    #: earliest re-dispatch time set by the queue's RetryPolicy on requeue;
+    #: the ticket keeps its head seniority but is not served before this
+    not_before: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -132,7 +140,8 @@ class TenantQueue:
     """
 
     def __init__(self, quantum: float = 64.0, timeout: Optional[float] = None,
-                 max_requeues: int = 3, capacity: int = 64):
+                 max_requeues: int = 3, capacity: int = 64,
+                 retry_policy: Optional[RetryPolicy] = None):
         #: DRR credit added per round per unit weight. Any value > 0 is
         #: fair in the long run; >= the typical request cost keeps each
         #: acquire() pass O(tenants).
@@ -140,6 +149,10 @@ class TenantQueue:
         self.timeout = timeout          # default per-request deadline
         self.max_requeues = max_requeues
         self.capacity = capacity
+        #: when set, a requeued ticket backs off (``not_before``) per the
+        #: policy before it can be dispatched again; the deadline is pushed
+        #: past the backoff so the delay never eats the ticket's timeout
+        self.retry_policy = retry_policy
         self._tenants: "Dict[str, TenantState]" = {}
         self._deadlines = DeadlineHeap()
         self._next_id = 0
@@ -202,31 +215,42 @@ class TenantQueue:
         packing). Within a class, deficit round-robin: each round every
         backlogged tenant earns ``weight * quantum`` credit and serves
         requests while credit and budget allow, so served cost converges to
-        the weight ratio whatever the request sizes."""
+        the weight ratio whatever the request sizes.
+
+        A head ticket still inside its retry backoff window (``not_before``
+        in the future) makes its tenant temporarily non-backlogged: the
+        slot passes to peers (or lower classes) instead of busy-waiting on
+        a ticket that chose to sit out."""
         now = self._now(now)
         self.expire(now)
+
+        def ready(t: TenantState) -> bool:
+            return bool(t.queue) and (t.queue[0].not_before is None
+                                      or t.queue[0].not_before <= now)
+
         taken: List[Ticket] = []
         remaining = budget
         self._rr_offset += 1
         classes = sorted({t.priority for t in self._tenants.values()
-                          if t.queue})
+                          if ready(t)})
         for prio in classes:
             cls = [t for t in self._tenants.values() if t.priority == prio]
             off = self._rr_offset % len(cls)
             cls = cls[off:] + cls[:off]
             while remaining > 0:
-                backlog = [t for t in cls if t.queue]
+                backlog = [t for t in cls if ready(t)]
                 if not backlog:
                     break
                 if min(t.queue[0].cost for t in backlog) > remaining:
                     remaining = 0       # strict: no bypass by lower classes
                     break
                 for t in backlog:
-                    if not t.queue:
-                        t.deficit = 0.0
+                    if not ready(t):
+                        if not t.queue:
+                            t.deficit = 0.0
                         continue
                     t.deficit += t.weight * self.quantum
-                    while (t.queue and t.queue[0].cost <= t.deficit
+                    while (ready(t) and t.queue[0].cost <= t.deficit
                            and t.queue[0].cost <= remaining):
                         tk = t.queue.popleft()
                         tk.status = SegStatus.RUNNING
@@ -297,8 +321,17 @@ class TenantQueue:
             REGISTRY.counter("tenant.failed", tenant=ticket.tenant).inc()
             return False
         ticket.status = SegStatus.PENDING
+        delay = 0.0
+        if self.retry_policy is not None:
+            # keyed by req_id so concurrent requeuers de-synchronize while
+            # a given ticket replays the same deterministic backoff ladder
+            delay = self.retry_policy.delay(max(0, ticket.requeues - 1),
+                                            key=ticket.req_id)
+            ticket.not_before = now + delay
+            REGISTRY.histogram("tenant.backoff_ms", bounds=MS_BUCKETS,
+                               tenant=ticket.tenant).observe(delay * 1e3)
         if ticket.timeout is not None:
-            ticket.deadline = now + ticket.timeout
+            ticket.deadline = now + delay + ticket.timeout
             self._deadlines.push(ticket.deadline, ticket)
         st.queue.appendleft(ticket)
         return True
@@ -387,13 +420,23 @@ class StreamExecutor:
     first-trace time and cached, so the steady-state zero-recompile
     guarantee is unaffected; ``REPRO_KERNEL_FORCE`` is part of the inner
     compile-cache key).
+
+    ``chaos``: a :class:`~repro.sphere.chaos.ChaosSchedule` (or a single
+    batch-armed :class:`~repro.sphere.chaos.FaultPlan`) of faults fired at
+    micro-batch boundaries: ``lose_batch`` drops the in-flight batch
+    (tickets requeue), ``lose_device`` additionally shrinks the mesh and
+    remeshes the carry from the boundary's :class:`StreamCheckpoint`
+    (exactly one recompile), and host faults hit the Sector deployment
+    wired in via :meth:`attach_sector`. Every fault and recovery appends
+    to the schedule's shared, deterministically-replayable audit log.
     """
 
     def __init__(self, inner: SPMDExecutor, pipeline: Dataflow,
                  micro_batch: int, carry_capacity: int = 0,
                  queue: Optional[TenantQueue] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 trace: Optional[Any] = None):
+                 trace: Optional[Any] = None,
+                 chaos: Optional[Any] = None):
         if not pipeline.stream:
             raise ValueError(
                 "StreamExecutor needs a Dataflow.stream_source() pipeline "
@@ -403,20 +446,36 @@ class StreamExecutor:
                              f"by the mesh axis size {inner.axis_size}")
         if carry_capacity:
             _last_reduce_index(pipeline)   # raises if there is no reduce
+        if chaos is not None and not hasattr(chaos, "due_at_batch"):
+            # a bare FaultPlan rides as a one-entry schedule; seed=0 keeps
+            # the plan's own seed untouched ((0*P+0)*P + s == s)
+            chaos = ChaosSchedule([chaos], seed=0)
         self.inner = inner
         self.pipeline = pipeline
         self.micro_batch = micro_batch
         self.carry_capacity = carry_capacity
         self.queue = queue if queue is not None else TenantQueue()
         self.trace = trace if trace is not None else NULL_TRACER
+        self.chaos: Optional[ChaosSchedule] = chaos
         self._clock = clock or time.monotonic
         self._carry: Optional[Tuple[Any, Any]] = None
         self._codec: Optional[RecordCodec] = None
         self._steps = 0
         self._records_in = 0
         self._batch_failures = 0
-        self._fail_next_batch = False   # test hook: simulate a lost batch
         self._run_seconds = 0.0
+        self._recoveries = 0
+        #: cache_info() of meshes retired by mid-stream recovery — stats()
+        #: sums them with the live executor so the "recompile once per
+        #: recovery" invariant stays checkable after the mesh shrank
+        self._retired_cache: List[Any] = []
+        self._checkpoint: Optional[StreamCheckpoint] = None
+        self._sector: Optional[Dict[str, Any]] = None
+        #: the carry buffer's GLOBAL row capacity is frozen at construction
+        #: (not re-derived from the current mesh) so a stream that loses
+        #: devices before its first carried batch still allocates the same
+        #: global state as the fault-free run
+        self._carry_cap_total = carry_capacity * inner.axis_size
 
     # -- submission ----------------------------------------------------------
     def submit(self, records: Any, tenant: str = "default",
@@ -444,7 +503,9 @@ class StreamExecutor:
 
     # -- the continuous loop -------------------------------------------------
     def step(self, now: Optional[float] = None) -> Optional[StreamBatch]:
-        """One micro-batch: expire deadlines, admit a fair batch, run the
+        """One micro-batch: expire deadlines, admit a fair batch, seal a
+        :class:`~repro.sphere.chaos.StreamCheckpoint` (carry + in-flight
+        ticket ids), run Sector upkeep and any due chaos faults, run the
         compiled pipeline once, deliver. Returns None on an idle tick (or a
         failed batch, whose tickets are requeued)."""
         now = self._now(now)
@@ -453,15 +514,14 @@ class StreamExecutor:
         if not tickets:
             return None
         tr = self.trace
-        if self._fail_next_batch:       # simulated batch loss (tests/soak)
-            self._fail_next_batch = False
-            self._batch_failures += 1
-            tr.event("batch_lost", step=self._steps,
-                     tickets=len(tickets))
-            requeued = [t for t in tickets if self.queue.requeue(t, now=now)]
-            return StreamBatch(step=self._steps, records=None,
-                               valid=np.zeros((0,), bool), dropped=0,
-                               delivered=[], requeued=requeued)
+        ckpt = StreamCheckpoint.seal(self._steps, tickets, self._carry)
+        self._checkpoint = ckpt
+        if self._sector is not None:
+            self._sector_boundary(ckpt, now, tr)
+        if self.chaos is not None:
+            failed = self._fire_chaos(tickets, ckpt, now, tr)
+            if failed is not None:
+                return failed
         batch, valid, n = self._assemble(tickets)
         if self.carry_capacity and self._carry is None:
             self._carry = self._init_carry(batch, valid)
@@ -500,6 +560,151 @@ class StreamExecutor:
                 out.append(b)
             max_steps -= 1
         return out
+
+    # -- durability + chaos --------------------------------------------------
+    def attach_sector(self, master: Any, client: Any, daemon: Any = None,
+                      detector: Any = None, prefix: str = "/stream/ckpt",
+                      retain: int = 8) -> None:
+        """Make the stream durable against Sector faults: at every
+        micro-batch boundary the sealed :class:`StreamCheckpoint` is
+        uploaded to a *versioned* path (``{prefix}.{step:06d}``; the last
+        ``retain`` are kept), the :class:`~repro.sector.master.FailureDetector`
+        ticks on the stream clock, newly-down slaves trigger
+        ``client.recover`` over the retained checkpoints (counted in
+        ``stats()["recoveries"]``), and finally the
+        :class:`~repro.sector.master.ReplicationDaemon` runs its lazy
+        re-replication pass. Host-level chaos faults (``kill_slave``,
+        ``rejoin_slave``, ``drop_bucket``) in the schedule fire against
+        this deployment and target the retained checkpoint paths."""
+        self._sector = {"master": master, "client": client, "daemon": daemon,
+                        "detector": detector, "prefix": prefix,
+                        "retain": max(1, int(retain)), "paths": []}
+
+    def _sector_boundary(self, ckpt: StreamCheckpoint, now: float,
+                         tr: Any) -> None:
+        s = self._sector
+        client, master = s["client"], s["master"]
+        path = f"{s['prefix']}.{ckpt.step:06d}"
+        client.upload(path, ckpt.to_bytes())
+        s["paths"].append(path)
+        while len(s["paths"]) > s["retain"]:
+            old = s["paths"].pop(0)
+            try:
+                client.delete(old)
+            except (IOError, OSError, KeyError):
+                pass                    # retention GC is best-effort
+        det = s["detector"]
+        if det is not None:
+            newly_down = det.tick(now)
+            if newly_down:
+                before = master.stats["recoveries"]
+                for p in list(s["paths"]):
+                    try:
+                        client.recover(p)
+                    except (IOError, OSError):
+                        pass            # daemon will keep trying
+                if master.stats["recoveries"] > before:
+                    self._recoveries += 1
+                    REGISTRY.counter("stream.recoveries").inc()
+                    tr.event("sector_recover", step=self._steps,
+                             slaves=str(newly_down),
+                             checkpoints=len(s["paths"]))
+                    if self.chaos is not None:
+                        self.chaos.events.append(
+                            f"batch {self._steps}: slaves {newly_down} "
+                            f"declared down; re-replicated "
+                            f"{len(s['paths'])} stream checkpoints")
+        if s["daemon"] is not None:
+            s["daemon"].tick()
+
+    def _fire_chaos(self, tickets: Sequence[Ticket],
+                    ckpt: StreamCheckpoint, now: float,
+                    tr: Any) -> Optional[StreamBatch]:
+        """Fire every schedule entry armed at this batch. Device loss
+        re-forms the mesh *and* abandons the in-flight batch (its tickets
+        requeue with full exactly-once protection); ``lose_batch`` only
+        abandons; host faults hit the attached Sector deployment and the
+        stream keeps running on top of it."""
+        failed: Optional[StreamBatch] = None
+        sector = self._sector or {}
+        for f in self.chaos.due_at_batch(self._steps):
+            if f.kind in SPMD_KINDS:
+                lost = f.fire_stream(self._steps,
+                                     num_devices=self.inner.axis_size)
+                self._recover_mesh(int(lost), ckpt, tr)
+                if failed is None:
+                    failed = self._abandon_batch(tickets, now, tr,
+                                                 reason="lose_device")
+            elif f.kind in STREAM_KINDS:
+                f.fire_stream(self._steps)
+                if failed is None:
+                    failed = self._abandon_batch(tickets, now, tr,
+                                                 reason="lose_batch")
+            else:                       # Sector-level host fault
+                f.fire_stream(self._steps, master=sector.get("master"),
+                              paths=tuple(sector.get("paths", ())))
+        return failed
+
+    def _abandon_batch(self, tickets: Sequence[Ticket], now: float,
+                       tr: Any, reason: str) -> StreamBatch:
+        self._batch_failures += 1
+        tr.event("batch_lost", step=self._steps, tickets=len(tickets),
+                 reason=reason)
+        requeued = [t for t in tickets if self.queue.requeue(t, now=now)]
+        return StreamBatch(step=self._steps, records=None,
+                           valid=np.zeros((0,), bool), dropped=0,
+                           delivered=[], requeued=requeued)
+
+    def _recover_mesh(self, lost: int, ckpt: StreamCheckpoint,
+                      tr: Any) -> None:
+        """Mid-stream elastic recovery: re-form the survivor mesh, restore
+        the carry from the just-sealed checkpoint onto it (the FULL padded
+        buffer — global shape unchanged, so exactly one recompile), swap
+        the inner executor, count the recovery."""
+        from repro.train import elastic
+        inner = self.inner
+        nb = self._bucket_constraint()
+        with tr.span("stream.recover", step=self._steps, lost_device=lost):
+            new_mesh = elastic.shrink_mesh(inner.mesh, inner.axes, lost, nb)
+            new_inner = inner._sub_executor(new_mesh)
+            if self._carry is not None:
+                self._carry = ckpt.restore_carry(new_mesh, inner.axes)
+            self._retired_cache.append(inner.cache_info())
+            self.inner = new_inner
+        if self.micro_batch % new_inner.axis_size:
+            raise AssertionError(   # unreachable: new extent divides old
+                "survivor mesh must divide the micro-batch")
+        self._recoveries += 1
+        REGISTRY.counter("stream.recoveries").inc()
+        shape = dict(zip(inner.axes,
+                         (new_mesh.shape[a] for a in inner.axes)))
+        self.chaos.events.append(
+            f"batch {self._steps}: resumed stream on mesh {shape} "
+            f"({new_inner.axis_size} devices); carry remeshed, "
+            f"{len(ckpt.ticket_ids)} tickets requeued")
+
+    def _bucket_constraint(self) -> int:
+        """gcd of the pipeline's explicit bucket counts — the same contract
+        :meth:`SPMDExecutor.run` enforces for chaos/resume: every shuffle
+        and sort must pin its bucket count, or the auto default (the axis
+        size) would change under the shrunken mesh."""
+        nbs = []
+        for ph in _phases(self.pipeline):
+            t = ph.terminator
+            if t is None:
+                continue
+            nb = t.num_buckets
+            if (nb is None and isinstance(t, SortStage)
+                    and t.splitters is not None):
+                nb = int(np.asarray(t.splitters).shape[0]) + 1
+            if nb is None:
+                raise ValueError(
+                    "mid-stream elastic recovery needs an explicit "
+                    "num_buckets (or sort splitters) on every shuffle/sort "
+                    "stage — an auto bucket count would change when the "
+                    "mesh shrinks")
+            nbs.append(nb)
+        return math.gcd(*nbs) if nbs else self.inner.axis_size
 
     # -- batch assembly / carry ----------------------------------------------
     def _assemble(self, tickets: Sequence[Ticket]):
@@ -551,7 +756,7 @@ class StreamExecutor:
                 "streaming carry requires a schema-preserving reduce (its "
                 "output is fed back into its input next batch); got input "
                 f"schema {in_schema} vs output {out_schema}")
-        cap = self.carry_capacity * self.inner.axis_size
+        cap = self._carry_cap_total
         leaves = [jnp.zeros((cap,) + tuple(s), d) for s, d in out_schema]
         return (jax.tree.unflatten(t_out, leaves),
                 jnp.zeros((cap,), jnp.bool_))
@@ -568,9 +773,14 @@ class StreamExecutor:
     # -- stats ---------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
         """Executor + per-tenant serving stats: throughput, compile-cache
-        counters (zero recompiles after warm-up <=> ``misses`` frozen),
-        queue depths, latency percentiles, timeout/requeue counts."""
-        info = self.inner.cache_info()
+        counters (zero recompiles after warm-up <=> ``misses`` frozen; a
+        mesh-shrinking recovery adds exactly one miss — retired meshes'
+        counters are summed in), queue depths, latency percentiles,
+        timeout/requeue counts, mid-stream recoveries."""
+        infos = [*self._retired_cache, self.inner.cache_info()]
+        cache = infos[-1]._asdict()
+        for key in ("hits", "misses", "evictions"):
+            cache[key] = sum(getattr(i, key) for i in infos)
         secs = max(self._run_seconds, 1e-9)
         return {
             "steps": self._steps,
@@ -578,6 +788,7 @@ class StreamExecutor:
             "records_per_s": self._records_in / secs,
             "run_seconds": self._run_seconds,
             "batch_failures": self._batch_failures,
-            "cache": info._asdict(),
+            "recoveries": self._recoveries,
+            "cache": cache,
             "tenants": self.queue.stats(),
         }

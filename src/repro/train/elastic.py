@@ -49,18 +49,22 @@ def remesh(tree, mesh: Mesh, specs):
         tdef, [jax.device_put(t, s) for t, s in zip(flat_t, flat_s)])
 
 
-def shrink_mesh(mesh: Mesh, axes: Sequence[str], lost_device: int,
+def shrink_mesh(mesh: Mesh, axes: Sequence[str],
+                lost_device: "int | Sequence[int]",
                 num_buckets: int) -> Mesh:
-    """Re-form the largest usable mesh after losing one device mid-pipeline.
+    """Re-form the largest usable mesh after losing device(s) mid-pipeline.
 
     ``lost_device`` is the global (row-major over ``axes``) index of the dead
-    device. The surviving devices cannot keep the old shape, so the shuffle
-    axes shrink to the largest extent that still
+    device — or a sequence of them, for multi-fault chaos schedules that
+    lose several devices over a stream's lifetime. The surviving devices
+    cannot keep the old shape, so the shuffle axes shrink to the largest
+    extent that still
 
-    - divides ``num_buckets`` (bucket ownership stays contiguous), and
+    - divides ``num_buckets`` (bucket ownership stays contiguous),
     - divides the old extent (every old per-device shard lands *whole* on
       one new device when a hop checkpoint is re-sharded, so reduce groups
-      and bucket segments are never split across devices).
+      and bucket segments are never split across devices), and
+    - fits on the surviving devices.
 
     A flat plan shrinks its single axis; a two-level ``(dc, node)`` plan
     keeps the DC count and shrinks the node axis (a lost node does not make
@@ -74,18 +78,27 @@ def shrink_mesh(mesh: Mesh, axes: Sequence[str], lost_device: int,
     if len(flat) != total:
         raise ValueError(f"mesh has axes {dict(mesh.shape)} beyond the "
                          f"shuffle axes {axes}; cannot shrink")
-    if not 0 <= lost_device < total:
-        raise ValueError(f"lost_device={lost_device} out of range {total}")
-    survivors = [d for i, d in enumerate(flat) if i != lost_device]
+    if isinstance(lost_device, (int, np.integer)):
+        lost = {int(lost_device)}
+    else:
+        lost = {int(d) for d in lost_device}
+    if not lost:
+        raise ValueError("shrink_mesh needs at least one lost device")
+    for d in lost:
+        if not 0 <= d < total:
+            raise ValueError(f"lost_device={d} out of range {total}")
+    survivors = [d for i, d in enumerate(flat) if i not in lost]
     if len(axes) == 1:
         old = shape[0]
         k = next((k for k in range(old - 1, 0, -1)
-                  if old % k == 0 and num_buckets % k == 0), None)
+                  if old % k == 0 and num_buckets % k == 0
+                  and k <= len(survivors)), None)
         new_shape: Tuple[int, ...] = (k,) if k else ()
     else:
         dcs, nodes = shape
         k = next((k for k in range(nodes - 1, 0, -1)
-                  if nodes % k == 0 and num_buckets % (dcs * k) == 0), None)
+                  if nodes % k == 0 and num_buckets % (dcs * k) == 0
+                  and dcs * k <= len(survivors)), None)
         new_shape = (dcs, k) if k else ()
     if not k:
         raise ValueError(

@@ -15,6 +15,7 @@ bounded retry counts.
 """
 
 import collections
+import os
 
 import numpy as np
 import pytest
@@ -26,12 +27,18 @@ import jax.numpy as jnp
 from repro.core.mapreduce import default_hash, reduce_by_key_sum
 from repro.core.records import RecordCodec
 from repro.launch.train import make_sector
-from repro.sphere.chaos import FaultPlan, HopCheckpoint
+from repro.sphere.chaos import ChaosSchedule, FaultPlan, HopCheckpoint
 from repro.sphere.dataflow import Dataflow, HostExecutor, SPMDExecutor
 from repro.sphere.spe import SPE, SegmentLost
 
 NB = 8
 N_PAGES = 4
+BENCH = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                     "benchmarks"))
+#: CI runs this file under a seed matrix (REPRO_CHAOS_SEED in {0, 1, 2});
+#: every seeded property below shifts by it, so the matrix explores
+#: disjoint victim/ordering draws while any one cell stays deterministic
+SEED_BASE = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
 
 
 def _emit(rec):
@@ -76,7 +83,7 @@ def _counts(res):
 # -- HostExecutor chaos matrix -------------------------------------------------
 
 
-@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("seed", [SEED_BASE, SEED_BASE + 1, SEED_BASE + 2])
 @pytest.mark.parametrize("phase", [0, 1])
 @pytest.mark.parametrize("kind", ["kill_slave", "drop_bucket"])
 def test_host_chaos_multiset_invariant(tmp_path, kind, phase, seed):
@@ -211,6 +218,127 @@ def test_segment_lost_exception_carries_path(tmp_path):
     assert isinstance(ei.value, IOError)
 
 
+# -- ChaosSchedule: ordered multi-fault sequences ------------------------------
+
+
+def test_chaos_schedule_multi_fault_host_multiset(tmp_path):
+    """A kill_slave @ boundary 0 followed by rejoin_slave @ boundary 1 — one
+    ordered schedule, one shared audit log — still delivers the fault-free
+    multiset, and the rejoined slave is live (incarnation bumped,
+    re-absorbed by scan) at the end."""
+    pages = _pages()
+    want = dict(collections.Counter(pages[:, 0].tolist()))
+    master, client, daemon, spes, paths = _deploy(tmp_path, pages)
+    sched = ChaosSchedule([
+        FaultPlan(kind="kill_slave", phase=0),
+        FaultPlan(kind="rejoin_slave", phase=1),
+    ], seed=SEED_BASE)
+    res = HostExecutor(master, client, spes, daemon=daemon).run(
+        _pipeline(), paths, chaos=sched)
+
+    assert sched.fired and sched.fired_count == 2
+    assert not res.errors and int(res.dropped) == 0
+    assert _counts(res) == want
+    assert "killed slave" in sched.events[0]
+    rejoin = next(e for e in sched.events if "rejoined" in e)
+    assert "incarnation 1" in rejoin
+    assert all(s.alive for s in master.slaves.values())  # victim is back
+
+
+def test_chaos_schedule_is_deterministic(tmp_path):
+    """Same ChaosSchedule seed + same deployment => byte-identical shared
+    events (in firing order) and identical results, across independent
+    deployments — the multi-fault replay guarantee."""
+    pages = _pages()
+    runs = []
+    for sub in ("a", "b"):
+        d = tmp_path / sub
+        d.mkdir()
+        master, client, daemon, spes, paths = _deploy(d, pages)
+        sched = ChaosSchedule([
+            FaultPlan(kind="kill_slave", phase=0),
+            FaultPlan(kind="rejoin_slave", phase=1),
+        ], seed=SEED_BASE + 3)
+        res = HostExecutor(master, client, spes, daemon=daemon).run(
+            _pipeline(), paths, chaos=sched)
+        runs.append((list(sched.events), _counts(res)))
+    assert runs[0] == runs[1]
+
+
+def test_chaos_schedule_rederives_member_seeds():
+    """Two same-kind, same-seed members of one schedule draw from DISTINCT
+    derived streams (position-mixed), and the schedule seed perturbs every
+    member — so schedules never alias each other or their members."""
+    def seeds(schedule_seed):
+        s = ChaosSchedule([FaultPlan(kind="lose_device", at_batch=0),
+                           FaultPlan(kind="lose_device", at_batch=1)],
+                          seed=schedule_seed)
+        return [f.seed for f in s.faults]
+
+    a, b = seeds(0), seeds(1)
+    assert a[0] != a[1]                 # position decorrelates members
+    assert a != b                       # schedule seed perturbs all members
+    assert seeds(1) == seeds(1)         # and it is all deterministic
+    s = ChaosSchedule([FaultPlan(kind="lose_batch", at_batch=4)])
+    assert s.kinds == ("lose_batch",)
+    assert s.due_at_batch(3) == [] and s.due_at_batch(4) == s.faults
+    assert not s.fired and s.fired_count == 0
+
+
+def test_stream_checkpoint_roundtrip_byte_deterministic():
+    """StreamCheckpoint serialization is byte-deterministic (no timestamps:
+    two seals of the same boundary serialize identically) and round-trips
+    the carry arrays, step and ticket ids exactly."""
+    import dataclasses as dc
+
+    from repro.sphere.chaos import StreamCheckpoint
+
+    @dc.dataclass
+    class Tk:
+        req_id: int
+
+    rng = np.random.default_rng(0)
+    carry = ({"key": rng.integers(0, 99, 16).astype(np.int32),
+              "value": rng.integers(0, 9, 16).astype(np.int32)},
+             rng.integers(0, 2, 16).astype(bool))
+    tickets = [Tk(3), Tk(11), Tk(7)]
+    blob = StreamCheckpoint.seal(5, tickets, carry).to_bytes()
+    blob2 = StreamCheckpoint.seal(5, tickets, carry).to_bytes()
+    assert blob == blob2 and blob.startswith(StreamCheckpoint.MAGIC)
+
+    back = StreamCheckpoint.from_bytes(blob)
+    assert back.step == 5 and back.ticket_ids == (3, 11, 7)
+    import jax
+    mesh = jax.make_mesh((1,), ("data",))
+    rec2, valid2 = back.restore_carry(mesh, ("data",))
+    for k in carry[0]:
+        np.testing.assert_array_equal(np.asarray(rec2[k]), carry[0][k])
+    np.testing.assert_array_equal(np.asarray(valid2), carry[1])
+    # a carry-less boundary (before the first stateful batch) also rides
+    empty = StreamCheckpoint.from_bytes(
+        StreamCheckpoint.seal(0, [], None).to_bytes())
+    assert empty.carry is None and empty.restore_carry(mesh, ("data",)) is None
+
+
+def test_stream_chaos_soak_acceptance():
+    """Run the real stream-chaos soak end-to-end and apply its acceptance
+    gates: >= 30 micro-batches surviving a 4-fault schedule with exactly 2
+    recoveries and 2 compiles, exactly-once delivery, stream == fault-free
+    batch, byte-identical same-seed replay, bounded recovery overhead."""
+    run_spmd(f"""
+import sys
+sys.path.insert(0, {BENCH!r})
+import stream_chaos_bench
+res = stream_chaos_bench.soak(chaos=True)
+replay = stream_chaos_bench.soak(chaos=True)
+baseline = stream_chaos_bench.soak(chaos=False)
+failures = stream_chaos_bench.check(res, replay, baseline)
+assert not failures, failures
+print("stream chaos soak ok:", res["steps"], "batches,",
+      res["recoveries"], "recoveries,", len(res["events"]), "audit events")
+""")
+
+
 # -- chaos plan / checkpoint units ---------------------------------------------
 
 
@@ -272,7 +400,7 @@ def test_spmd_chaos_matrix():
     """Flat and hierarchical topologies x both hop boundaries x 3 seeds:
     segmented-with-checkpoints == fused, and an injected device loss at any
     boundary resumes on a shrunken mesh with the multiset intact."""
-    run_spmd("""
+    run_spmd(("SEED_BASE = %d\n" % SEED_BASE) + """
 import collections
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.mapreduce import default_hash, reduce_by_key_sum
@@ -311,7 +439,7 @@ for mesh, axes in meshes:
         assert counts(seg) == want
         assert int(seg.dropped) == int(clean.dropped) == 0
         for phase in (0, 1):
-            for seed in (0, 1, 2):
+            for seed in (SEED_BASE, SEED_BASE + 1, SEED_BASE + 2):
                 chaos = FaultPlan(kind="lose_device", phase=phase, seed=seed)
                 res = ex.run(df, src, chaos=chaos)
                 assert chaos.fired, (axes, phase, seed)
@@ -327,7 +455,7 @@ def test_spmd_chaos_between_two_shuffle_hops():
     loses a device at every boundary — before stage A, between stage A and
     stage B, and after stage B — and always delivers the fault-free
     multiset."""
-    run_spmd("""
+    run_spmd(("SEED_BASE = %d\n" % SEED_BASE) + """
 import collections
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.mapreduce import default_hash, reduce_by_key_sum
@@ -364,7 +492,7 @@ with mesh:
     clean = ex.run(df, src)
     assert counts(clean) == want and int(clean.dropped) == 0
     for phase in (0, 1, 2):
-        for seed in (0, 1):
+        for seed in (SEED_BASE, SEED_BASE + 1):
             chaos = FaultPlan(kind="lose_device", phase=phase, seed=seed)
             res = ex.run(df, src, chaos=chaos)
             assert chaos.fired and res.recoveries == 1
@@ -377,7 +505,7 @@ print("two-hop chaos ok")
 def test_spmd_chaos_sort_resume():
     """Device loss against the two-stage sort: the resumed run is still a
     globally sorted permutation of the input."""
-    run_spmd("""
+    run_spmd(("SEED_BASE = %d\n" % SEED_BASE) + """
 import jax, jax.numpy as jnp, numpy as np
 from repro.sphere.chaos import FaultPlan
 from repro.sphere.dataflow import Dataflow, SPMDExecutor
@@ -395,7 +523,7 @@ with mesh:
     clean = ex.run(df, src)
     cvr = clean.valid_records()
     assert int(clean.dropped) == 0
-    for seed in (0, 1):
+    for seed in (SEED_BASE, SEED_BASE + 1):
         chaos = FaultPlan(kind="lose_device", phase=0, seed=seed)
         res = ex.run(df, src, chaos=chaos)
         vr = res.valid_records()

@@ -1,0 +1,204 @@
+"""Shared RetryPolicy: capped exponential backoff with deterministic seeded
+jitter, and its three consumers — engine segment retries (host.backoff_ms
+histogram + retry event attrs), TenantQueue requeue backoff (not_before
+honored on a virtual clock), and SectorClient.recover retry loops."""
+
+import numpy as np
+import pytest
+
+from repro.core.retry import RetryPolicy
+
+
+# -- the policy itself ---------------------------------------------------------
+
+
+def test_delay_is_capped_exponential():
+    p = RetryPolicy(base=0.1, factor=2.0, cap=1.0)
+    assert p.delay(0) == pytest.approx(0.1)
+    assert p.delay(1) == pytest.approx(0.2)
+    assert p.delay(2) == pytest.approx(0.4)
+    assert p.delay(5) == 1.0                       # capped, not 3.2
+    assert p.delay(50) == 1.0                      # no overflow blowup
+    assert p.schedule(4) == tuple(p.delay(a) for a in range(4))
+    with pytest.raises(ValueError):
+        p.delay(-1)
+
+
+def test_default_policy_is_zero_delay():
+    """The zero-base default is behavior-preserving: consumers wired with
+    RetryPolicy() retry immediately (and record 0ms observations)."""
+    p = RetryPolicy()
+    assert all(d == 0.0 for d in p.schedule(10))
+
+
+def test_jitter_is_bounded_and_deterministic():
+    p = RetryPolicy(base=0.5, factor=2.0, cap=60.0, jitter=0.2, seed=7)
+    for attempt in range(6):
+        nominal = min(60.0, 0.5 * 2.0 ** attempt)
+        d = p.delay(attempt, key=3)
+        assert 0.8 * nominal <= d <= 1.2 * nominal
+        assert d == p.delay(attempt, key=3)        # same draw every time
+    # distinct keys de-synchronize concurrent retriers
+    draws = {p.delay(2, key=k) for k in range(16)}
+    assert len(draws) > 8
+    # distinct seeds give distinct ladders; equal seeds agree
+    q = RetryPolicy(base=0.5, factor=2.0, cap=60.0, jitter=0.2, seed=8)
+    assert p.schedule(6, key=1) != q.schedule(6, key=1)
+    assert p.schedule(6, key=1) == RetryPolicy(
+        base=0.5, factor=2.0, cap=60.0, jitter=0.2, seed=7).schedule(6, key=1)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(base=-1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(cap=-0.1)
+
+
+# -- TenantQueue backoff -------------------------------------------------------
+
+
+def test_tenant_queue_requeue_backoff_honored():
+    """A requeued ticket keeps its head seniority but is not dispatched
+    before ``not_before``; its deadline is pushed past the backoff so the
+    delay never eats the timeout; peer tenants are served meanwhile."""
+    from repro.sphere.streaming import TenantQueue
+
+    q = TenantQueue(quantum=16.0, timeout=10.0,
+                    retry_policy=RetryPolicy(base=2.0, factor=2.0, cap=8.0))
+    q.register("t")
+    q.register("u")
+    tk = q.admit("t", "p", now=0.0)
+    (got,) = q.acquire(1, now=0.0)
+    assert got is tk
+    assert q.requeue(tk, now=1.0)                  # backoff = base = 2.0
+    assert tk.not_before == pytest.approx(3.0)
+    assert tk.deadline == pytest.approx(13.0)      # now + delay + timeout
+    # tenant t's head is backing off -> the slot passes to tenant u
+    other = q.admit("u", "o", now=1.0)
+    assert q.acquire(1, now=2.0) == [other]
+    q.complete(other, now=2.0)
+    assert q.acquire(1, now=2.9) == []             # still inside the window
+    assert q.acquire(1, now=3.0) == [tk]           # ready exactly on time
+    assert q.complete(tk, now=3.5)
+    assert q.stats()["t"]["delivered"] == 1
+    assert q.stats()["u"]["delivered"] == 1
+
+
+def test_tenant_queue_backoff_escalates_per_requeue():
+    from repro.sphere.streaming import TenantQueue
+
+    q = TenantQueue(quantum=16.0, max_requeues=5,
+                    retry_policy=RetryPolicy(base=1.0, factor=2.0, cap=16.0))
+    q.register("t")
+    tk = q.admit("t", "p", now=0.0)
+    waits = []
+    now = 0.0
+    for _ in range(3):
+        (got,) = q.acquire(1, now=tk.not_before or now)
+        assert got is tk
+        now = (tk.not_before or now)
+        q.requeue(tk, now=now)
+        waits.append(tk.not_before - now)
+    assert waits == [pytest.approx(1.0), pytest.approx(2.0),
+                     pytest.approx(4.0)]           # the exponential ladder
+
+
+# -- SectorClient.recover retry ------------------------------------------------
+
+
+def test_client_recover_retries_until_survivor_appears(tmp_path):
+    """A transiently-unrecoverable file (every copy gone NOW, a survivor
+    appears during the backoff window) succeeds within ``recover_attempts``;
+    the injected sleep sees the policy's deterministic delays."""
+    from test_sector import make_deployment
+    from repro.sector import SectorClient
+
+    _, m = make_deployment(tmp_path, replication=2)
+    data = b"flaky" * 40
+    slept = []
+
+    def sleep(d):
+        slept.append(d)
+        if len(slept) == 2:        # the survivor comes back mid-backoff
+            stash.write_file("/d/flaky.dat", data)
+
+    c = SectorClient(m, "u", "pw",
+                     retry_policy=RetryPolicy(base=0.0),  # no real waiting
+                     recover_attempts=4, sleep=sleep)
+    c.upload("/d/flaky.dat", data)
+    stash = next(s for s in m.live_slaves()
+                 if s.slave_id not in m.lookup("/d/flaky.dat").locations)
+    for s in m.slaves.values():
+        s.drop_file("/d/flaky.dat")
+    meta = c.recover("/d/flaky.dat")
+    assert len(slept) == 2                         # failed twice, then won
+    assert stash.slave_id in meta.locations
+    assert c.download("/d/flaky.dat") == data
+    # exhausted attempts still fail loudly
+    for s in m.slaves.values():
+        s.drop_file("/d/flaky.dat")
+    slept.clear()
+    with pytest.raises(IOError):
+        SectorClient(m, "u", "pw", retry_policy=RetryPolicy(),
+                     recover_attempts=3, sleep=slept.append
+                     ).recover("/d/flaky.dat")
+    assert len(slept) == 2                         # attempts-1 backoffs
+
+
+# -- engine + metrics wiring ---------------------------------------------------
+
+
+def test_engine_retry_events_carry_attempt_and_delay(tmp_path):
+    """Satellite (c): engine ``retry`` trace events expose ``attempt=`` and
+    ``delay_ms=`` and every backoff lands in the ``host.backoff_ms``
+    histogram."""
+    from test_sector import make_deployment
+    from repro.obs.metrics import MS_BUCKETS, REGISTRY
+    from repro.obs.trace import Tracer
+    from repro.sector import SectorClient
+    from repro.sphere.engine import SphereProcess
+    from repro.sphere.spe import SPE
+
+    _, m = make_deployment(tmp_path, replication=2)
+    c = SectorClient(m, "u", "pw")
+    rng = np.random.default_rng(0)
+    slices = [rng.integers(0, 256, size=(32, 4), dtype=np.uint8)
+              for _ in range(2)]
+    c.upload_dataset("/r/rec", [s.tobytes() for s in slices])
+    spes = [SPE(i, m.slaves[i].address, m, c.session_id) for i in range(2)]
+
+    hist = REGISTRY.histogram("host.backoff_ms", bounds=MS_BUCKETS)
+    before = hist.snapshot()["count"]
+    calls = {"n": 0}
+
+    def flaky_udf(records):
+        calls["n"] += 1
+        if calls["n"] <= 2:                        # first try per segment dies
+            raise ValueError("transient")
+        return records
+
+    sleeps = []
+    proc = SphereProcess(m, c.session_id, spes, max_retries=3,
+                         retry_policy=RetryPolicy(base=0.01, jitter=0.5,
+                                                  seed=2),
+                         sleep=sleeps.append)
+    tr = Tracer()
+    res = proc.run([f"/r/rec.{i:05d}" for i in range(2)], flaky_udf,
+                   record_bytes=4, trace=tr)
+    assert not res.errors and res.retries >= 2
+    retry_events = [e for e in tr.buffer.events() if e.name == "retry"]
+    assert len(retry_events) >= 2
+    for e in retry_events:
+        assert e.attrs["attempt"] >= 1
+        assert e.attrs["delay_ms"] > 0.0
+        assert e.attrs["reason"] == "udf_error"
+    # the jittered delays actually elapsed and landed in the histogram
+    assert len(sleeps) == len(retry_events)
+    assert [round(s * 1e3, 3) for s in sleeps] == [
+        e.attrs["delay_ms"] for e in retry_events]
+    assert hist.snapshot()["count"] - before == len(retry_events)

@@ -256,6 +256,120 @@ def test_lost_then_recovered_bucket_roundtrip(tmp_path):
     assert m.stats["recoveries"] >= 1
 
 
+# -- scan-recovery majority vote + heartbeat failure detection (PR 10) ---------
+
+
+@pytest.mark.parametrize("stale_on_low_id", [True, False])
+def test_recover_from_scan_majority_vote_both_orders(tmp_path,
+                                                     stale_on_low_id):
+    """Regression: 1 stale replica vs 2 good ones must crown the GOOD md5
+    whichever slave is scanned first — majority across live holders, not
+    scan order — and the stale copy is deleted from its slave."""
+    _, m = make_deployment(tmp_path, replication=3)
+    good, stale = b"good" * 50, b"STALE" * 40
+    holders = sorted(m.slaves)[:3]
+    stale_holder = holders[0] if stale_on_low_id else holders[-1]
+    for sid in holders:
+        m.slaves[sid].write_file(
+            "/d/vote.dat", stale if sid == stale_holder else good)
+    m.recover_from_scan()
+    meta = m.lookup("/d/vote.dat")
+    assert meta.size == len(good)
+    assert set(meta.locations) == set(holders) - {stale_holder}
+    assert not m.slaves[stale_holder].has_file("/d/vote.dat")  # purged
+    c = SectorClient(m, "u", "pw")
+    assert c.download("/d/vote.dat") == good
+
+
+def test_recover_from_scan_tie_breaks_deterministically(tmp_path):
+    """A 1-vs-1 split has no majority: the lexicographically smallest md5
+    wins, so every rebuild of the same disks yields the same index."""
+    import hashlib
+    _, m = make_deployment(tmp_path, replication=2)
+    a, b = b"copy-a" * 30, b"copy-b" * 30
+    s0, s1 = sorted(m.slaves)[:2]
+    m.slaves[s0].write_file("/d/tie.dat", a)
+    m.slaves[s1].write_file("/d/tie.dat", b)
+    m.recover_from_scan()
+    first = (m.lookup("/d/tie.dat").md5, set(m.lookup("/d/tie.dat").locations))
+    want_md5 = min(hashlib.md5(a).hexdigest(), hashlib.md5(b).hexdigest())
+    assert first[0] == want_md5
+    # rebuilding from the surviving disks reproduces the same verdict
+    m.recover_from_scan()
+    assert (m.lookup("/d/tie.dat").md5,
+            set(m.lookup("/d/tie.dat").locations)) == first
+
+
+def test_failure_detector_state_machine(tmp_path):
+    """alive -> suspect -> down -> rejoined on a virtual clock: suspicion
+    after ``suspect_after`` without a heartbeat (still believed alive), down
+    after ``down_after`` (locations pruned exactly once), and a restarted
+    slave is re-absorbed by the scan path on its next heartbeat."""
+    from repro.sector import FailureDetector
+
+    _, m = make_deployment(tmp_path, replication=2)
+    c = SectorClient(m, "u", "pw")
+    c.upload("/d/hb.dat", b"h" * 100)
+    ReplicationDaemon(m).run_until_stable()
+    clock = [0.0]
+    det = FailureDetector(m, suspect_after=2.0, down_after=5.0,
+                          clock=lambda: clock[0])
+    assert det.tick() == []                    # everyone beat at t=0
+    victim = next(iter(m.lookup("/d/hb.dat").locations))
+    m.slaves[victim].kill(wipe=False)
+    clock[0] = 1.0
+    assert det.tick() == []
+    assert det.state[victim] == det.ALIVE      # age 1 <= suspect_after
+    clock[0] = 3.0
+    assert det.tick() == []
+    assert det.state[victim] == det.SUSPECT
+    assert det.believes_alive(victim)          # suspicion is not death
+    clock[0] = 6.0
+    assert det.tick() == [victim]
+    assert det.state[victim] == det.DOWN
+    assert not det.believes_alive(victim)
+    assert victim not in m.lookup("/d/hb.dat").locations   # pruned
+    clock[0] = 7.0
+    assert det.tick() == []                    # down is declared ONCE
+    m.slaves[victim].restart()                 # disk intact (wipe=False)
+    clock[0] = 8.0
+    assert det.tick() == []
+    assert det.state[victim] == det.ALIVE
+    assert det.stats == {"suspected": 1, "downed": 1, "rejoined": 1}
+    assert victim in m.lookup("/d/hb.dat").locations       # scan re-absorbed
+    assert any("rejoined" in e for e in det.events)
+
+
+def test_detector_driven_daemon_waits_for_down(tmp_path):
+    """Re-replication is driven by detector BELIEF, not omniscient liveness:
+    a dead slave's replicas still count while it is merely suspect (no
+    premature healing), and the first tick after ``down_after`` restores
+    the factor."""
+    from repro.sector import FailureDetector
+
+    _, m = make_deployment(tmp_path, replication=2)
+    c = SectorClient(m, "u", "pw")
+    c.upload("/d/bel.dat", b"b" * 100)
+    clock = [0.0]
+    det = FailureDetector(m, suspect_after=1.0, down_after=3.0,
+                          clock=lambda: clock[0])
+    d = ReplicationDaemon(m, clock=lambda: clock[0], detector=det)
+    d.run_until_stable()
+    base = m.stats["replications"]
+    victim = next(iter(m.lookup("/d/bel.dat").locations))
+    m.slaves[victim].kill(wipe=True)
+    clock[0] = 2.0                             # past suspect, before down
+    d.tick()
+    assert det.state[victim] == det.SUSPECT
+    assert m.stats["replications"] == base     # believed alive: no healing
+    clock[0] = 4.0                             # past down_after
+    d.tick()
+    assert det.state[victim] == det.DOWN
+    assert m.stats["replications"] > base
+    live = [s for s in m.lookup("/d/bel.dat").locations if m.slaves[s].alive]
+    assert len(live) >= m.replication_factor
+
+
 def test_recover_raises_when_all_copies_gone(tmp_path):
     """No survivor anywhere: recover must fail loudly (counted as a lost
     file), never fabricate data."""

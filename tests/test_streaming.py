@@ -232,14 +232,19 @@ def test_stream_executor_carry_and_cache_counters():
 
 
 def test_stream_executor_failed_batch_requeue_exactly_once():
-    """A lost micro-batch requeues its tickets; they are delivered on a later
-    batch — exactly once — and the final aggregate is unaffected."""
-    ex = _make_stream_executor(carry_capacity=8, clock=lambda: 0.0)
+    """A lost micro-batch (scheduled ``lose_batch`` fault) requeues its
+    tickets; they are delivered on a later batch — exactly once — and the
+    final aggregate is unaffected."""
+    from repro.sphere.chaos import ChaosSchedule, FaultPlan
+
+    ex = _make_stream_executor(
+        carry_capacity=8, clock=lambda: 0.0,
+        chaos=ChaosSchedule([FaultPlan(kind="lose_batch", at_batch=0)]))
     rng = np.random.default_rng(1)
     xs = [rng.integers(0, 50, size=16).astype(np.int32) for _ in range(3)]
     tickets = [ex.submit({"x": x}) for x in xs]
-    ex._fail_next_batch = True
     lost = ex.step()
+    assert ex.chaos.fired and len(ex.chaos.events) == 1
     assert lost.delivered == [] and len(lost.requeued) == 1
     assert lost.requeued[0].requeues == 1
     delivered = [tk for b in ex.drain() for tk in b.delivered]
@@ -361,6 +366,83 @@ hres = HostExecutor(master, client, spes).run(
 hrec = hres.valid_records()
 assert {int(k): int(v) for k, v in zip(hrec["key"], hrec["value"])} == want
 print("stream == batch across executors:", len(want), "keys")
+""")
+
+
+def test_stream_mid_batch_device_loss_elastic_recovery():
+    """Acceptance: a stream surviving ``lose_device`` at batch 1 shrinks the
+    mesh 8 -> 4, remeshes the carry from the boundary StreamCheckpoint with
+    exactly ONE recompile, requeues the in-flight ticket through the
+    TenantQueue (exactly once — requeued once, delivered once), and ends at
+    a snapshot multiset-identical to the fault-free one-shot run."""
+    run_spmd("""
+import collections
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.mapreduce import default_hash, reduce_by_key_sum
+from repro.sphere.chaos import ChaosSchedule, FaultPlan
+from repro.sphere.dataflow import Dataflow, SPMDExecutor
+from repro.sphere.streaming import StreamExecutor, TenantQueue
+
+NB = 8
+def emit(rec):
+    return {"key": rec["word"].astype(jnp.int32),
+            "value": jnp.ones_like(rec["word"], jnp.int32)}
+def count(rec, valid):
+    k, v, dropped = reduce_by_key_sum(rec["key"], rec["value"], valid)
+    return {"key": k, "value": v}, k >= 0, dropped
+df = (Dataflow.stream_source()
+      .map(emit)
+      .shuffle(by=lambda r: default_hash(r["key"], NB), num_buckets=NB)
+      .reduce(count))
+
+mesh = jax.make_mesh((8,), ("data",))
+MB = 8 * 32
+sched = ChaosSchedule([FaultPlan(kind="lose_device", at_batch=1)], seed=5)
+queue = TenantQueue(quantum=float(MB))
+vclock = {"now": 0.0}
+ex = StreamExecutor(SPMDExecutor(mesh), df, micro_batch=MB,
+                    carry_capacity=32, queue=queue,
+                    clock=lambda: vclock["now"], chaos=sched)
+rng = np.random.default_rng(21)
+words = rng.integers(0, 26, size=5 * MB, dtype=np.uint8)
+tickets = [ex.submit({"word": words[i*MB:(i+1)*MB]}) for i in range(5)]
+
+results = []
+step = 0
+while queue.pending():
+    vclock["now"] = float(step)
+    b = ex.step()
+    if b is not None:
+        results.append(b)
+    step += 1
+
+# batch 1 was abandoned: its ticket requeued once, then delivered once
+lost = [b for b in results if not b.delivered]
+assert len(lost) == 1 and len(lost[0].requeued) == 1
+victim = lost[0].requeued[0]
+assert victim.requeues == 1 and victim.attempts == 2
+delivered = [tk for b in results for tk in b.delivered]
+assert sorted(tk.req_id for tk in delivered) == \\
+    sorted(t.req_id for t in tickets)               # all once, none twice
+
+# mesh shrank 8 -> 4 with one recovery and exactly one extra recompile
+st = ex.stats()
+assert ex.inner.axis_size == 4
+assert st["recoveries"] == 1
+assert st["cache"]["misses"] == 2, st["cache"]
+assert sched.fired and len(sched.events) == 2       # fault + resume audit
+
+# exactly-once end to end: snapshot == one-shot over everything submitted
+want = dict(collections.Counter(words.astype(int).tolist()))
+snap = ex.carry_state()
+assert {int(k): int(v) for k, v in zip(snap["key"], snap["value"])} == want
+
+# the requeued ticket's latency spans the full wait + recovery (admitted
+# at t=0, head-requeued at the loss, delivered on the post-recovery batch)
+assert victim.completed_at == 2.0
+assert queue.stats()["default"]["latency_p99"] >= 2.0
+print("mid-stream device loss: recovered on", ex.inner.axis_size,
+      "devices, snapshot equal to fault-free run")
 """)
 
 
